@@ -1,0 +1,176 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Sections:
+
+  fig6   performance scalability (weak scaling, normalized to 8-lane Ara2)
+  fig7   interface latency tolerance (utilization drop per register cut)
+  tab1   kernel peak-rate check (Table I max-perf model vs simulated)
+  tab2   area model vs published kGE breakdown
+  tab3   PPA (peak GFLOPs / energy / area efficiency)
+  kern   Pallas kernels (interpret) vs jnp oracle wall time
+  ring   AraXL core collectives correctness+wall time (8 fake devices)
+  roof   roofline summary per dry-run cell (requires results/dryrun/*.json)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+
+def _t(fn, *args, reps=3, **kw):
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def bench_fig6():
+    from repro.sim import ara2_params, araxl_params, build_trace, simulate
+    kernels = ["fmatmul", "fconv2d", "jacobi2d", "fdotproduct", "exp",
+               "softmax"]
+    base = {}
+    for k in kernels:
+        p8 = ara2_params(8)
+        r8 = simulate(build_trace(k, p8, 512), p8)
+        base[k] = r8.flop_per_cycle
+    for lanes in (8, 16, 32, 64):
+        p = araxl_params(lanes)
+        for k in kernels:
+            us, res = _t(lambda: simulate(build_trace(k, p, 512), p))
+            scale = res.flop_per_cycle / base[k]
+            print(f"fig6/{k}/L{lanes},{us:.0f},"
+                  f"scale={scale:.2f}x util={res.utilization:.3f}")
+
+
+def bench_fig7():
+    from repro.sim import araxl_params, build_trace, simulate
+    cuts = [("glsu+4", dict(glsu=4)), ("reqi+1", dict(reqi=1)),
+            ("ringi+1", dict(ringi=1))]
+    p0 = araxl_params(64)
+    for name, kw in cuts:
+        for k in ("fmatmul", "fconv2d", "jacobi2d", "fdotproduct", "exp",
+                  "softmax"):
+            p1 = p0.with_cuts(**kw)
+            u0 = simulate(build_trace(k, p0, 512), p0).utilization
+            u1 = simulate(build_trace(k, p1, 512), p1).utilization
+            print(f"fig7/{name}/{k},0,drop={100*(u0-u1):.2f}%")
+
+
+def bench_tab1():
+    from repro.sim import araxl_params, build_trace, simulate
+    from repro.sim.kernels import max_perf_flop_per_cycle
+    p = araxl_params(64)
+    for k in ("fmatmul", "fconv2d", "jacobi2d", "fdotproduct", "exp",
+              "softmax"):
+        res = simulate(build_trace(k, p, 512), p)
+        peak = max_perf_flop_per_cycle(k, 64)
+        print(f"tab1/{k},0,fpc={res.flop_per_cycle:.1f}/"
+              f"{peak:.1f} ({100*res.flop_per_cycle/peak:.0f}% of Table-I peak)")
+
+
+def bench_tab2():
+    from repro.sim import araxl_params
+    from repro.sim import paper, ppa
+    for lanes in (16, 32, 64):
+        got = ppa.area_breakdown_kge(araxl_params(lanes))
+        want = paper.TABLE_II_KGE[lanes]
+        err = 100 * (got["total"] - want["total"]) / want["total"]
+        print(f"tab2/area/L{lanes},0,model={got['total']:.0f}kGE "
+              f"paper={want['total']}kGE err={err:+.1f}% "
+              f"ifc={100*ppa.interface_area_fraction(araxl_params(lanes)):.1f}%")
+
+
+def bench_tab3():
+    from repro.sim import araxl_params, build_trace, simulate
+    from repro.sim import paper, ppa
+    for lanes in (16, 32, 64):
+        p = araxl_params(lanes)
+        u = simulate(build_trace("fmatmul", p, 512), p).utilization
+        perf = ppa.peak_gflops(p, u)
+        eeff = ppa.energy_eff_gflops_per_w(p, u)
+        aeff = ppa.area_eff_gflops_per_mm2(p, u)
+        w = paper.TABLE_III[lanes]
+        print(f"tab3/ppa/L{lanes},0,"
+              f"perf={perf:.1f}GF(paper {w[1]}) "
+              f"eeff={eeff:.1f}GF/W(paper {w[2]}) "
+              f"aeff={aeff:.1f}GF/mm2(paper {w[3]})")
+
+
+def bench_kernels():
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+
+    a = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    us_p, _ = _t(lambda: ops.matmul(a, b, use_pallas=True).block_until_ready())
+    us_r, _ = _t(lambda: ref.matmul(a, b).block_until_ready())
+    print(f"kern/matmul_256(interpret),{us_p:.0f},ref={us_r:.0f}us")
+
+    x = jnp.asarray(rng.normal(size=(32, 512)), jnp.float32)
+    us_p, _ = _t(lambda: ops.softmax_rows(x, use_pallas=True)
+                 .block_until_ready())
+    us_r, _ = _t(lambda: ref.softmax_rows(x).block_until_ready())
+    print(f"kern/softmax_rows(interpret),{us_p:.0f},ref={us_r:.0f}us")
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    us_p, _ = _t(lambda: ops.attention(q, k, v, use_pallas=True, bq=64,
+                                       bk=64).block_until_ready())
+    us_r, _ = _t(lambda: ref.attention(q, k, v).block_until_ready())
+    print(f"kern/flash_attn(interpret),{us_p:.0f},ref={us_r:.0f}us")
+
+
+def bench_ring():
+    from repro.testing.subproc import run_check
+    t0 = time.perf_counter()
+    run_check("repro.testing.check_core", "2", "4", devices=8)
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"ring/core_suite_8dev,{us:.0f},all-modes-allclose")
+
+
+def bench_roofline():
+    outdir = pathlib.Path(__file__).resolve().parents[1] / "results/dryrun"
+    cells = sorted(outdir.glob("*.json")) if outdir.exists() else []
+    if not cells:
+        print("roof/none,0,run `python -m repro.launch.dryrun --all` first")
+        return
+    for f in cells:
+        rec = json.loads(f.read_text())
+        if "skipped" in rec:
+            print(f"roof/{f.stem},0,SKIP({rec['skipped']})")
+            continue
+        r = rec["roofline"]
+        print(f"roof/{f.stem},0,"
+              f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+              f"collective={r['collective_s']:.4f}s bound={r['bottleneck']} "
+              f"mfu_ub={r.get('mfu_upper_bound', 0):.3f} "
+              f"mem={rec['mem_per_device']['resident_model_gib']:.1f}GiB")
+
+
+SECTIONS = {
+    "fig6": bench_fig6, "fig7": bench_fig7, "tab1": bench_tab1,
+    "tab2": bench_tab2, "tab3": bench_tab3, "kern": bench_kernels,
+    "ring": bench_ring, "roof": bench_roofline,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(SECTIONS)
+    print("name,us_per_call,derived")
+    for name in which:
+        SECTIONS[name]()
+
+
+if __name__ == '__main__':
+    main()

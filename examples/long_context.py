@@ -1,0 +1,52 @@
+"""Long-context via the RINGI idiom: ring attention + SSM state streaming.
+
+Demonstrates the paper's thesis at the sequence level: a long context
+sharded over a ring of devices, attention/KV blocks rotating one neighbour
+hop per step (slide-by-1), exactness verified against the single-device
+oracle.
+
+Run:  PYTHONPATH=src python examples/long_context.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.parallel.ring_attention import ring_attention
+
+
+def main():
+    n = 8
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(0)
+    B, S, H, Hkv, D = 1, 8 * 256, 8, 2, 64       # 2k tokens over an 8-ring
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.bfloat16)
+
+    fn = jax.jit(lambda q, k, v: ring_attention(q, k, v, mesh, causal=True,
+                                                window=512))
+    out = fn(q, k, v)                             # compile + run
+    t0 = time.time()
+    out = jax.block_until_ready(fn(q, k, v))
+    dt = time.time() - t0
+
+    want = ref.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3), causal=True,
+                         window=512).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    print(f"ring attention over {n} devices: S={S}, SWA window 512")
+    print(f"  wall {dt*1e3:.1f} ms, max err vs oracle {err:.2e}")
+    print(f"  KV bytes rotated/device/step: "
+          f"{2 * (S // n) * H * D * 2 / 1e6:.2f} MB x {n-1} hops")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Serve a small model with continuously-batched requests.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--arch mixtral-8x7b]
+Uses the reduced same-family config on CPU; on a pod the same engine drives
+the full config against the production mesh (see launch/dryrun.py decode
+cells for the sharding).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+    finished = run(args.arch, smoke=True, n_requests=args.requests,
+                   max_new=args.max_new, max_batch=4, max_seq=128)
+    for r in finished[:4]:
+        print(f"req {r.rid}: prompt[:6]={r.prompt[:6].tolist()} "
+              f"-> {len(r.out)} tokens: {r.out[:10]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline / §Perf tables from results/."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def load(d):
+    out = {}
+    p = ROOT / d
+    if not p.exists():
+        return out
+    for f in sorted(p.glob("*.json")):
+        out[f.stem] = json.loads(f.read_text())
+    return out
+
+
+def fmt_cell(rec):
+    r = rec["roofline"]
+    m = rec["mem_per_device"]
+    return (f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+            f"{rec.get('n_microbatches', 1)} | "
+            f"{m['resident_model_gib']:.1f} ({m['total_gib']:.1f}) | "
+            f"{'Y' if rec['fits_16gib_hbm'] else 'N'} | "
+            f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | {r['bottleneck'].replace('_s','')} | "
+            f"{rec['model_vs_hlo_flops']:.2f} | "
+            f"{r['mfu_upper_bound']*100:.1f}% |")
+
+
+HEADER = ("| arch | shape | mesh | nm | resident GiB (cpu-arena) | fits "
+          "| compute s | memory s | collective s | bound | 6ND/HLO "
+          "| roofline frac |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    dry = load("results/dryrun")
+    perf = load("results/perf")
+
+    lines = []
+    lines.append("## §Dry-run + §Roofline — baseline table (single pod "
+                 "16x16 = 256 chips)\n")
+    lines.append(HEADER)
+    skips = []
+    multi_ok = []
+    for k, rec in dry.items():
+        if "skipped" in rec:
+            skips.append(f"* `{rec['arch']} x {rec['shape']}` — "
+                         f"{rec['skipped']}")
+            continue
+        if rec["mesh"] == "pod16x16":
+            lines.append(fmt_cell(rec))
+        else:
+            multi_ok.append(rec)
+    lines.append("\n### Multi-pod (2x16x16 = 512 chips) compile results\n")
+    lines.append(HEADER)
+    for rec in multi_ok:
+        lines.append(fmt_cell(rec))
+    lines.append("\n### Noted skips (DESIGN.md §Arch-applicability)\n")
+    lines.extend(sorted(set(skips)))
+
+    lines.append("\n\n## §Perf — hillclimb records\n")
+    lines.append("| cell | strategy | compute s | memory s | collective s "
+                 "| bound | roofline frac | resident GiB |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for k, rec in perf.items():
+        r = rec["roofline"]
+        lines.append(
+            f"| {rec['arch']} x {rec['shape']} | {rec.get('strategy','?')} | "
+            f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | {r['bottleneck'].replace('_s','')} | "
+            f"{r['mfu_upper_bound']*100:.1f}% | "
+            f"{rec['mem_per_device']['resident_model_gib']:.1f} |")
+
+    print("\n".join(lines))
+
+
+if __name__ == "__main__":
+    main()

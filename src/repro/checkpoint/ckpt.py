@@ -1,0 +1,145 @@
+"""Sharded, elastic, async checkpointing (no external deps).
+
+Format: one directory per step containing
+    manifest.json        - tree structure, shapes, dtypes, mesh shape, step
+    <leaf-id>.npy        - one host-local file per leaf (gathered shard-0
+                           addressable data in this single-host environment;
+                           on a real pod each host writes its own slice files
+                           and the manifest records the global layout)
+
+Fault-tolerance properties:
+* atomic publish: writes go to ``<dir>.tmp`` then os.replace -> a crashed
+  writer never corrupts the latest checkpoint;
+* elastic restore: ``restore_checkpoint(..., shardings=...)`` re-shards onto
+  ANY mesh (more/fewer devices than the writer) — restore is jax.device_put
+  against the target sharding, so a 512-chip checkpoint restarts on 256;
+* async: ``CheckpointManager.save_async`` snapshots to host memory on the
+  train thread, serialises on a worker thread — the step loop never blocks
+  on disk;
+* retention: keeps the newest ``keep`` checkpoints, deletes older ones only
+  after the newest is durable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str | pathlib.Path, tree: Any, step: int,
+                    extra: dict | None = None) -> pathlib.Path:
+    path = pathlib.Path(path)
+    final = path / f"step_{step:08d}"
+    tmp = path / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, treedef = _flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "extra": extra or {},
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if logical_dtype == "bfloat16":
+            arr = arr.view(np.uint16)          # npy-portable container
+        np.save(tmp / f"leaf_{i:05d}.npy", arr)
+        manifest["leaves"].append({"shape": list(arr.shape),
+                                   "dtype": logical_dtype})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)                    # atomic publish
+    return final
+
+
+def latest_step(path: str | pathlib.Path) -> int | None:
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in path.glob("step_*")
+             if not p.name.endswith(".tmp") and (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str | pathlib.Path, tree_like: Any,
+                       step: int | None = None, shardings: Any = None) -> Any:
+    """Restore into the structure of ``tree_like``; if ``shardings`` is given
+    (a matching pytree of NamedSharding), leaves are placed sharded — this is
+    the elastic-rescale path (any target mesh)."""
+    path = pathlib.Path(path)
+    step = latest_step(path) if step is None else step
+    assert step is not None, f"no checkpoint under {path}"
+    d = path / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves, treedef = _flatten(tree_like)
+    assert manifest["n_leaves"] == len(leaves), "tree structure changed"
+    shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                    else [None] * len(leaves))
+    import ml_dtypes
+    out = []
+    for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(d / f"leaf_{i:05d}.npy")
+        stored = manifest["leaves"][i]["dtype"]
+        if stored == "bfloat16" and arr.dtype == np.uint16:
+            arr = arr.view(ml_dtypes.bfloat16)
+        want = getattr(ref, "dtype", None)
+        if want is not None and str(want) != str(arr.dtype):
+            arr = arr.astype(want)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out), step, manifest["extra"]
+
+
+class CheckpointManager:
+    """Async writer with retention. Snapshot on the caller thread (device ->
+    host copy), serialise on a worker thread."""
+
+    def __init__(self, path: str | pathlib.Path, keep: int = 3):
+        self.path = pathlib.Path(path)
+        self.keep = keep
+        self._worker: threading.Thread | None = None
+        self._err: Exception | None = None
+
+    def wait(self):
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if self._err:
+            raise self._err
+
+    def save_async(self, tree: Any, step: int, extra: dict | None = None):
+        self.wait()                                  # one in flight
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def run():
+            try:
+                save_checkpoint(self.path, host, step, extra)
+                self._gc()
+            except Exception as e:                   # surfaced on next wait()
+                self._err = e
+
+        self._worker = threading.Thread(target=run, daemon=True)
+        self._worker.start()
+
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.path.glob("step_*")
+                       if not p.name.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.path / f"step_{s:08d}", ignore_errors=True)

@@ -1,0 +1,178 @@
+"""GLSU — the Global Load/Store Unit (AraXL §III-B.3), as staged collectives.
+
+AraXL's scalability bottleneck (inherited from Ara2) was the O(L²) all-to-all
+byte-mapping network between the memory bus and the lanes' VRF chunks.  The
+paper replaces it with a *multi-level pipeline of power-of-2 shifts* (Align
+stage) followed by an EW-aware Shuffle stage, trading latency (more pipeline
+levels, each cuttable with registers) for physical scalability — affordable
+because long vectors tolerate latency.
+
+Mapped to a TPU mesh, the byte-mapping network is the redistribution between
+
+    memory layout    x[p*B : (p+1)*B] on ring position p      (how a DMA burst /
+                                                               data-pipeline shard arrives)
+    register layout  x[b*n + p] row b of ring position p      (the striped VRF map)
+
+which is a transpose-flavoured all-to-all.  Two implementations:
+
+``mode="staged"`` — the paper-faithful network: log2(n) rounds; in round k a
+    bucket moves 2**k ring positions forward iff bit k of its remaining
+    distance is set.  Every round is a single neighbour-distance-2**k
+    ``ppermute`` (a pipelined shift register chain in hardware, a short-range
+    ICI hop on TPU).  This is exactly the Align/Shuffle decomposition.
+
+``mode="direct"`` — one XLA resharding (reshape + sharding constraint): the
+    flat all-to-all AraXL argues *against* in hardware; on TPU the XLA
+    all-to-all is the baseline the staged version is compared with in §Perf.
+
+Regularity requirement for the staged network: ``B % n == 0`` (each ring
+position exchanges exactly B/n elements with every other position) — the
+analogue of the paper's "Addrgen handles request splitting and bandwidth
+conversion"; callers pad vectors to n² granularity first (``vle`` does).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .layout import VectorLayout, VectorMachineSpec
+from .ring import ppermute_shift, ring_pos
+
+
+# ---------------------------------------------------------------------------
+# Host reference (pure numpy) — the oracle for tests.
+# ---------------------------------------------------------------------------
+
+def mem_to_reg_host(x: np.ndarray, C: int, L: int) -> np.ndarray:
+    """(n*B,) memory order -> (B, C, L) striped."""
+    return np.asarray(x).reshape(-1, C, L)
+
+
+def reg_to_mem_host(reg: np.ndarray) -> np.ndarray:
+    return np.asarray(reg).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# The staged routing core (runs inside shard_map; static schedule).
+# ---------------------------------------------------------------------------
+
+def _route_buckets(buf: jax.Array, axis_names: Sequence[str], n: int) -> jax.Array:
+    """Route bucket o of ``buf`` (shape (n, m)) exactly o ring positions
+    forward, via log2(n) power-of-2 shift rounds.
+
+    Movement schedule is static: bucket o moves in round k iff bit k of o is
+    set (its remaining distance after earlier rounds has low bits cleared).
+    After routing, slot o on device d holds the bucket that *originated* at
+    device (d - o) mod n.
+    """
+    assert n & (n - 1) == 0, "staged GLSU requires power-of-2 ring size"
+    o = jnp.arange(n)
+    k = 0
+    while (1 << k) < n:
+        step = 1 << k
+        moved = ppermute_shift(buf, axis_names, -step, n)   # receive from p-step
+        take_moved = ((o >> k) & 1).astype(bool)
+        buf = jnp.where(take_moved.reshape((n,) + (1,) * (buf.ndim - 1)), moved, buf)
+        k += 1
+    return buf
+
+
+def n_staged_rounds(n: int) -> int:
+    return max(1, int(math.log2(n)))
+
+
+# ---------------------------------------------------------------------------
+# mem -> reg (vector load through the GLSU)
+# ---------------------------------------------------------------------------
+
+def _mem_to_reg_local(xloc: jax.Array, axis_names: Sequence[str], n: int) -> jax.Array:
+    """Local body: (B,) memory shard -> (B, 1, 1)-flattened striped column."""
+    B = xloc.shape[0]
+    assert B % n == 0, f"staged GLSU needs B % n == 0 (B={B}, n={n})"
+    m = B // n
+    p = ring_pos(axis_names)
+    # --- bucketing (the Shuffle-stage table): destination of element j is
+    # (p*B + j) mod n; with B % n == 0 that is j mod n. Bucket o=(d-p) mod n
+    # holds elements destined for device d = p+o, i.e. j ≡ d (mod n).
+    j = jnp.arange(B)
+    d_of_j = j % n                                     # destination device of elem j
+    # bucket index o = (d - p) mod n ; inside bucket ordered by t = j // n
+    order = jnp.argsort((d_of_j - p) % n * B + j)      # group by o, then t
+    buckets = xloc[order].reshape(n, m)
+    # --- Align: power-of-2 shift rounds
+    routed = _route_buckets(buckets, axis_names, n)
+    # --- assembly: on device d, slot o originated at q=(d-o) mod n and fills
+    # rows [q*m, (q+1)*m). Order slots by source id and concatenate.
+    dpos = ring_pos(axis_names)
+    src_of_slot = (dpos - jnp.arange(n)) % n
+    slot_of_src = jnp.argsort(src_of_slot)             # src q -> slot index
+    col = routed[slot_of_src].reshape(B)
+    return col.reshape(B, 1, 1)
+
+
+def mem_to_reg(spec: VectorMachineSpec, x: jax.Array, mode: str = "staged") -> jax.Array:
+    """Vector load: 1-D memory-layout array (length B*n, blocked-sharded over
+    the ring) -> (B, C, L) striped register."""
+    n = spec.n_total_lanes
+    C, L = spec.n_clusters, spec.n_lanes
+    assert x.ndim == 1 and x.shape[0] % n == 0
+    B = x.shape[0] // n
+
+    if mode == "direct":
+        reg = x.reshape(B, C, L)
+        return jax.lax.with_sharding_constraint(reg, spec.reg_sharding())
+
+    axes = spec.ring_axes
+    fn = lambda xloc: _mem_to_reg_local(xloc.reshape(-1), axes, n)
+    out = jax.shard_map(fn, mesh=spec.mesh,
+                        in_specs=(spec.mem_spec(),),
+                        out_specs=spec.reg_spec())(x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# reg -> mem (vector store through the GLSU)
+# ---------------------------------------------------------------------------
+
+def _reg_to_mem_local(col: jax.Array, axis_names: Sequence[str], n: int) -> jax.Array:
+    B = col.shape[0]
+    assert B % n == 0
+    m = B // n
+    d = ring_pos(axis_names)
+    # device d holds elements i = b*n + d; destination memory device q = b // m.
+    # bucket for q is rows [q*m, (q+1)*m) with offset o = (q - d) mod n.
+    b = jnp.arange(B)
+    q_of_b = b // m
+    order = jnp.argsort(((q_of_b - d) % n) * B + b)    # group by o, then row
+    buckets = col[order].reshape(n, m)
+    routed = _route_buckets(buckets, axis_names, n)
+    # assembly on memory device q: slot o came from source dsrc=(q-o) mod n,
+    # carrying elements with local j = t*n + dsrc.
+    qpos = ring_pos(axis_names)
+    o = jnp.arange(n)
+    jj = jnp.arange(B)
+    slot_of_j = (qpos - (jj % n)) % n                  # o' for each local j
+    t_of_j = jj // n
+    out = routed[slot_of_j, t_of_j]
+    return out
+
+
+def reg_to_mem(spec: VectorMachineSpec, reg: jax.Array, mode: str = "staged") -> jax.Array:
+    n = spec.n_total_lanes
+    B = reg.shape[0]
+    if mode == "direct":
+        x = reg.reshape(-1)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(spec.mesh, spec.mem_spec()))
+
+    axes = spec.ring_axes
+    fn = lambda c: _reg_to_mem_local(c.reshape(-1), axes, n)
+    out = jax.shard_map(fn, mesh=spec.mesh,
+                        in_specs=(spec.reg_spec(),),
+                        out_specs=spec.mem_spec())(reg)
+    return out

@@ -1,0 +1,236 @@
+"""RVV-flavoured vector ISA over the distributed register file.
+
+Two interchangeable "machines" expose the same instruction surface:
+
+* :class:`AraXLMachine` — executes on a JAX mesh: elementwise ops are
+  device-local on the striped layout, slides/reductions ride the RINGI
+  (`repro.core.ring`), loads/stores ride the GLSU (`repro.core.glsu`).
+  This is the REQI analogue: one SPMD program, broadcast to every cluster.
+
+* :class:`repro.sim.trace.TraceMachine` — same surface, no data: it appends
+  instruction records that the cycle-approximate simulator replays.
+
+The six paper kernels (`repro.core.isa_kernels`) are written once against
+this surface and run on either machine — the JAX run validates semantics,
+the trace run reproduces the paper's cycle-level figures.
+
+Supported at full throughput (the paper's explicit fast set): unit-stride
+loads/stores, slide-by-1, reductions, basic mask ops.  Irregular RVV ops
+(gathers, arbitrary slides) exist but take slow paths, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import glsu, ring
+from .layout import (VReg, VectorLayout, VectorMachineSpec, global_index_grid,
+                     valid_mask)
+
+
+@dataclasses.dataclass
+class InstrRecord:
+    """One issued vector instruction (consumed by repro.sim)."""
+    op: str            # mnemonic, e.g. "vfmacc.vf"
+    vl: int            # element count
+    unit: str          # fpu | valu | vlsu | sldu | masku | redu
+    flops_per_elem: float = 0.0
+    meta: dict | None = None
+
+
+class AraXLMachine:
+    """JAX executor for the vector ISA on a hierarchical mesh.
+
+    ``glsu_mode`` / ``reduce_mode`` select paper-faithful staged/ring
+    implementations vs flat XLA collectives (the §Perf ablation switch).
+    """
+
+    #: ops counted with >1 flop/element (paper Table I: exp is a 7-term
+    #: polynomial + range reduction -> 28 FLOP per element over 21 cycles).
+    _EXP_FLOPS = 28.0
+
+    def __init__(self, spec: VectorMachineSpec, *, glsu_mode: str = "staged",
+                 reduce_mode: str = "ring", dtype=jnp.float32,
+                 trace: Optional[list] = None):
+        self.spec = spec
+        self.glsu_mode = glsu_mode
+        self.reduce_mode = reduce_mode
+        self.dtype = dtype
+        self.trace = trace
+
+    # -- bookkeeping --------------------------------------------------------
+    @property
+    def vlmax(self) -> int:
+        return self.spec.vlen_elems
+
+    def _rec(self, op: str, vl: int, unit: str, fpe: float = 0.0, **meta):
+        if self.trace is not None:
+            self.trace.append(InstrRecord(op, vl, unit, fpe, meta or None))
+
+    def _pad_len(self, vl: int) -> int:
+        n = self.spec.n_total_lanes
+        quantum = n * n if self.glsu_mode == "staged" else n
+        return ((vl + quantum - 1) // quantum) * quantum
+
+    # -- loads / stores (GLSU) ----------------------------------------------
+    def vle(self, x, vl: int | None = None) -> VReg:
+        x = jnp.asarray(x, self.dtype).reshape(-1)
+        vl = int(x.shape[0]) if vl is None else vl
+        pvl = self._pad_len(vl)
+        if x.shape[0] < pvl:
+            x = jnp.pad(x, (0, pvl - x.shape[0]))
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.spec.mesh, self.spec.mem_spec()))
+        data = glsu.mem_to_reg(self.spec, x, self.glsu_mode)
+        self._rec("vle64.v", vl, "vlsu")
+        return VReg(data, vl)
+
+    def vse(self, r: VReg) -> jax.Array:
+        out = glsu.reg_to_mem(self.spec, r.data, self.glsu_mode)
+        self._rec("vse64.v", r.vl, "vlsu")
+        return out[: r.vl]
+
+    # -- register constructors ----------------------------------------------
+    def vbrd(self, value, vl: int) -> VReg:
+        pvl = self._pad_len(vl)
+        C, L = self.spec.n_clusters, self.spec.n_lanes
+        B = pvl // (C * L)
+        data = jnp.full((B, C, L), value, self.dtype)
+        data = jax.lax.with_sharding_constraint(data, self.spec.reg_sharding())
+        r = VReg(data, vl)
+        if vl < pvl:  # keep the tail architecturally zero
+            data = jnp.where(valid_mask(self.spec, r), data, 0).astype(self.dtype)
+            r = VReg(data, vl)
+        self._rec("vmv.v.x", vl, "valu")
+        return r
+
+    def vid(self, vl: int) -> VReg:
+        pvl = self._pad_len(vl)
+        C, L = self.spec.n_clusters, self.spec.n_lanes
+        B = pvl // (C * L)
+        idx = global_index_grid(self.spec, B).astype(self.dtype)
+        idx = jnp.where(idx < vl, idx, 0)
+        idx = jax.lax.with_sharding_constraint(idx, self.spec.reg_sharding())
+        self._rec("vid.v", vl, "valu")
+        return VReg(idx, vl)
+
+    # -- elementwise (lane-local, no communication) --------------------------
+    def _ew2(self, op: str, unit: str, f, a: VReg, b, fpe=1.0) -> VReg:
+        bb = b.data if isinstance(b, VReg) else jnp.asarray(b, self.dtype)
+        vl = a.vl if not isinstance(b, VReg) else min(a.vl, b.vl)
+        out = f(a.data, bb)
+        self._rec(op, vl, unit, fpe)
+        return VReg(out.astype(self.dtype), vl)
+
+    def vadd(self, a: VReg, b) -> VReg:
+        return self._ew2("vfadd" if jnp.issubdtype(self.dtype, jnp.floating) else "vadd",
+                         "fpu", jnp.add, a, b)
+
+    def vsub(self, a: VReg, b) -> VReg:
+        return self._ew2("vfsub", "fpu", jnp.subtract, a, b)
+
+    def vmul(self, a: VReg, b) -> VReg:
+        return self._ew2("vfmul", "fpu", jnp.multiply, a, b)
+
+    def vdiv(self, a: VReg, b) -> VReg:
+        return self._ew2("vfdiv", "fpu", jnp.divide, a, b)
+
+    def vmax(self, a: VReg, b) -> VReg:
+        return self._ew2("vfmax", "fpu", jnp.maximum, a, b)
+
+    def vmin(self, a: VReg, b) -> VReg:
+        return self._ew2("vfmin", "fpu", jnp.minimum, a, b)
+
+    def vfma(self, a: VReg, b, c) -> VReg:
+        """a*b + c (vv or vf by b's type). One FMA = 2 FLOP."""
+        bb = b.data if isinstance(b, VReg) else jnp.asarray(b, self.dtype)
+        cc = c.data if isinstance(c, VReg) else jnp.asarray(c, self.dtype)
+        out = a.data * bb + cc
+        self._rec("vfmacc", a.vl, "fpu", 2.0)
+        return VReg(out.astype(self.dtype), a.vl)
+
+    def vfmacc_vf(self, acc: VReg, scalar, v: VReg) -> VReg:
+        out = acc.data + jnp.asarray(scalar, self.dtype) * v.data
+        self._rec("vfmacc.vf", v.vl, "fpu", 2.0)
+        return VReg(out.astype(self.dtype), v.vl)
+
+    def vexp(self, a: VReg) -> VReg:
+        out = jnp.where(valid_mask(self.spec, a), jnp.exp(a.data), 0)
+        self._rec("vexp(poly)", a.vl, "fpu", self._EXP_FLOPS)
+        return VReg(out.astype(self.dtype), a.vl)
+
+    # -- masks (MASKU: same layout as data => local) -------------------------
+    def vmslt(self, a: VReg, b) -> VReg:
+        return self._ew2("vmslt", "masku",
+                         lambda x, y: (x < y), a, b, fpe=0.0)
+
+    def vmsge(self, a: VReg, b) -> VReg:
+        return self._ew2("vmsge", "masku", lambda x, y: (x >= y), a, b, fpe=0.0)
+
+    def vmerge(self, mask: VReg, a: VReg, b) -> VReg:
+        bb = b.data if isinstance(b, VReg) else jnp.asarray(b, self.dtype)
+        out = jnp.where(mask.data.astype(bool), a.data, bb)
+        self._rec("vmerge", a.vl, "masku")
+        return VReg(out.astype(self.dtype), a.vl)
+
+    def vcpop(self, mask: VReg) -> jax.Array:
+        live = jnp.logical_and(mask.data.astype(bool), valid_mask(self.spec, mask))
+        self._rec("vcpop", mask.vl, "masku")
+        return jnp.sum(live)
+
+    # -- slides (RINGI) -------------------------------------------------------
+    def vslide1down(self, a: VReg, fill=0.0) -> VReg:
+        out = ring.slide1down(self.spec, a.data, fill)
+        self._rec("vfslide1down", a.vl, "sldu", meta={"hops": 1})
+        return VReg(out, a.vl)
+
+    def vslide1up(self, a: VReg, fill=0.0) -> VReg:
+        out = ring.slide1up(self.spec, a.data, fill)
+        self._rec("vfslide1up", a.vl, "sldu", meta={"hops": 1})
+        return VReg(out, a.vl)
+
+    def vslidedown(self, a: VReg, k: int) -> VReg:
+        axes, n = self.spec.ring_axes, self.spec.n_total_lanes
+        reg = self.spec.reg_spec()
+
+        def fn(x):
+            col = x.reshape(x.shape[0])
+            out = ring.slidedown_local(col, axes, n, k, 0.0)
+            return out.reshape(-1, 1, 1)
+
+        out = jax.shard_map(fn, mesh=self.spec.mesh, in_specs=(reg,),
+                            out_specs=reg)(a.data)
+        self._rec("vslidedown.vx", a.vl, "sldu", meta={"hops": k % n})
+        return VReg(out, a.vl)
+
+    # -- reductions (intra-lane -> inter-lane -> inter-cluster log tree) ------
+    def vredsum(self, a: VReg) -> jax.Array:
+        masked = jnp.where(valid_mask(self.spec, a), a.data, 0)
+        out = ring.reduce_scalar(self.spec, masked.astype(self.dtype), "sum",
+                                 self.reduce_mode)
+        self._rec("vfredsum", a.vl, "redu", 1.0)
+        return out
+
+    def vredmax(self, a: VReg) -> jax.Array:
+        neg = jnp.asarray(-jnp.inf, self.dtype)
+        masked = jnp.where(valid_mask(self.spec, a), a.data, neg)
+        out = ring.reduce_scalar(self.spec, masked.astype(self.dtype), "max",
+                                 self.reduce_mode)
+        self._rec("vfredmax", a.vl, "redu", 1.0)
+        return out
+
+    # -- stripmining ----------------------------------------------------------
+    def stripmine(self, total: int, lmul: int = 1):
+        """Yield (offset, vl) chunks, RVV vsetvli-style."""
+        step = self.vlmax * lmul
+        off = 0
+        while off < total:
+            vl = min(step, total - off)
+            self._rec("vsetvli", vl, "seq")
+            yield off, vl
+            off += vl

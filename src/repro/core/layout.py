@@ -1,0 +1,201 @@
+"""Distributed long-vector register layouts (AraXL §III-B.2).
+
+AraXL maps memory element ``i`` of a vector register to
+
+    cluster  (i // L) mod C        (C clusters)
+    lane      i mod L              (L lanes per cluster)
+    row       i // (C*L)           (depth inside the lane's VRF chunk)
+
+i.e. a *striped* (block-cyclic with block 1 over lanes, block L over clusters)
+layout.  This keeps mixed-width operations lane-local and feeds all FPUs from
+unit-stride memory streams.  We reproduce it exactly as ``VectorLayout.STRIPED``:
+a logical vector of ``vl`` elements is carried as a global array of shape
+``(B, C, L)`` sharded ``P(None, cluster_axis, lane_axis)`` so that device
+``(c, l)`` holds rows ``b`` of elements ``i = b*C*L + c*L + l``.
+
+``VectorLayout.BLOCKED`` is the beyond-paper TPU-native alternative (element
+``i`` lives on flat device ``i // B``): slides touch only boundary elements,
+at the cost of the paper's unit-stride DMA striping.  §Perf compares the two.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = str | tuple[str, ...]
+
+
+class VectorLayout(enum.Enum):
+    STRIPED = "striped"   # paper-faithful AraXL byte map
+    BLOCKED = "blocked"   # contiguous per-device blocks (TPU-native)
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return math.prod(mesh.shape[a] for a in axis)
+
+
+def _axis_tuple(axis: Axis) -> tuple[str, ...]:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorMachineSpec:
+    """Static geometry of the distributed vector machine.
+
+    ``cluster_axis`` plays AraXL's inter-cluster role (RINGI/GLSU hierarchy
+    level), ``lane_axis`` the intra-cluster lanes.  On the production mesh
+    these are ("pod","data") and "model" respectively.
+    """
+
+    mesh: Mesh
+    cluster_axis: Axis = "cluster"
+    lane_axis: Axis = "lane"
+    vlen_bits: int = 65536          # RVV-maximum 64 Kibit / vreg (the paper's flagship)
+    sew_bits: int = 64              # DP elements, as evaluated in the paper
+
+    @property
+    def n_clusters(self) -> int:
+        return _axis_size(self.mesh, self.cluster_axis)
+
+    @property
+    def n_lanes(self) -> int:
+        """Lanes per cluster."""
+        return _axis_size(self.mesh, self.lane_axis)
+
+    @property
+    def n_total_lanes(self) -> int:
+        return self.n_clusters * self.n_lanes
+
+    @property
+    def vlen_elems(self) -> int:
+        return self.vlen_bits // self.sew_bits
+
+    @property
+    def ring_axes(self) -> tuple[str, ...]:
+        """Flattened (cluster-major, lane-minor) ring over every lane.
+
+        Ring position of device (c, l) is ``p = c * L + l`` which matches the
+        element striping, so slide-by-1 is a single neighbour hop.
+        """
+        return _axis_tuple(self.cluster_axis) + _axis_tuple(self.lane_axis)
+
+    def reg_spec(self, layout: VectorLayout = VectorLayout.STRIPED) -> P:
+        if layout is VectorLayout.STRIPED:
+            return P(None, self.cluster_axis, self.lane_axis)
+        return P(self.ring_axes, None)
+
+    def reg_sharding(self, layout: VectorLayout = VectorLayout.STRIPED) -> NamedSharding:
+        return NamedSharding(self.mesh, self.reg_spec(layout))
+
+    def mem_spec(self) -> P:
+        """Memory-order layout: contiguous shards across the flattened ring.
+
+        This is how a DMA burst arrives from L2/HBM before the GLSU maps it
+        into the striped register file."""
+        return P(self.ring_axes)
+
+    def padded_vl(self, vl: int) -> int:
+        lanes = self.n_total_lanes
+        return ((vl + lanes - 1) // lanes) * lanes
+
+
+# ---------------------------------------------------------------------------
+# Pure index maps (the paper's byte-mapping equations) — used by tests and by
+# the GLSU reference implementation.
+# ---------------------------------------------------------------------------
+
+def element_to_coords(i: int | np.ndarray, C: int, L: int):
+    """AraXL: element-i -> (row b, cluster c, lane l)."""
+    b = i // (C * L)
+    c = (i // L) % C
+    l = i % L
+    return b, c, l
+
+
+def coords_to_element(b, c, l, C: int, L: int):
+    return b * (C * L) + c * L + l
+
+
+def mem_to_striped_host(x: np.ndarray, C: int, L: int) -> np.ndarray:
+    """Reference (host) GLSU mapping: 1-D memory vector -> (B, C, L)."""
+    assert x.ndim == 1 and x.shape[0] % (C * L) == 0
+    return x.reshape(-1, C, L)
+
+
+def striped_to_mem_host(reg: np.ndarray) -> np.ndarray:
+    return reg.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Register-file containers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class VReg:
+    """A distributed vector register: ``data`` is the (B, C, L) striped global
+    array (or (P, B) blocked), ``vl`` the live vector length (<= B*C*L), the
+    tail is architectural zero (RVV tail-agnostic, we pick tail-zero)."""
+
+    data: jax.Array
+    vl: int
+    layout: VectorLayout = VectorLayout.STRIPED
+
+    @property
+    def capacity(self) -> int:
+        return int(np.prod(self.data.shape))
+
+    def astype(self, dtype) -> "VReg":
+        return VReg(self.data.astype(dtype), self.vl, self.layout)
+
+
+def vreg_zeros(spec: VectorMachineSpec, vl: int, dtype=jnp.float32,
+               layout: VectorLayout = VectorLayout.STRIPED) -> VReg:
+    C, L = spec.n_clusters, spec.n_lanes
+    pvl = spec.padded_vl(vl)
+    B = pvl // (C * L)
+    shape = (B, C, L) if layout is VectorLayout.STRIPED else (C * L, B)
+    data = jnp.zeros(shape, dtype=dtype)
+    data = jax.device_put(data, spec.reg_sharding(layout))
+    return VReg(data, vl, layout)
+
+
+def valid_mask(spec: VectorMachineSpec, vreg: VReg) -> jax.Array:
+    """Boolean mask over the (padded) register marking i < vl, in-layout.
+
+    Carried in the *same* layout as the data (the MASKU byte-encoding insight:
+    masks never need cross-lane movement to be consumed)."""
+    C, L = spec.n_clusters, spec.n_lanes
+    B = vreg.capacity // (C * L)
+    if vreg.layout is VectorLayout.STRIPED:
+        b = jnp.arange(B)[:, None, None]
+        c = jnp.arange(C)[None, :, None]
+        l = jnp.arange(L)[None, None, :]
+        idx = b * (C * L) + c * L + l
+    else:
+        p = jnp.arange(C * L)[:, None]
+        b = jnp.arange(B)[None, :]
+        idx = p * B + b
+    return idx < vreg.vl
+
+
+def global_index_grid(spec: VectorMachineSpec, B: int,
+                      layout: VectorLayout = VectorLayout.STRIPED) -> jax.Array:
+    """The logical element index held at each physical slot."""
+    C, L = spec.n_clusters, spec.n_lanes
+    if layout is VectorLayout.STRIPED:
+        b = jnp.arange(B)[:, None, None]
+        c = jnp.arange(C)[None, :, None]
+        l = jnp.arange(L)[None, None, :]
+        return b * (C * L) + c * L + l
+    p = jnp.arange(C * L)[:, None]
+    b = jnp.arange(B)[None, :]
+    return p * B + b

@@ -1,0 +1,26 @@
+"""Machine construction helpers (the REQI view: one program, many clusters)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from .isa import AraXLMachine
+from .layout import VectorMachineSpec
+
+
+def make_vector_mesh(n_clusters: int, n_lanes: int,
+                     cluster_axis: str = "cluster",
+                     lane_axis: str = "lane") -> Mesh:
+    """A (C, L) mesh over however many devices exist (C*L must divide in)."""
+    return jax.make_mesh((n_clusters, n_lanes), (cluster_axis, lane_axis))
+
+
+def make_machine(n_clusters: int, n_lanes: int, *, vlen_bits: int = 65536,
+                 sew_bits: int = 64, glsu_mode: str = "staged",
+                 reduce_mode: str = "ring", dtype=None,
+                 trace: list | None = None) -> AraXLMachine:
+    import jax.numpy as jnp
+    mesh = make_vector_mesh(n_clusters, n_lanes)
+    spec = VectorMachineSpec(mesh, "cluster", "lane", vlen_bits, sew_bits)
+    return AraXLMachine(spec, glsu_mode=glsu_mode, reduce_mode=reduce_mode,
+                        dtype=dtype or jnp.float32, trace=trace)

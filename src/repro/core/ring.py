@@ -1,0 +1,256 @@
+"""RINGI — the AraXL ring interconnect, as TPU-native collectives (§III-B.4).
+
+AraXL joins adjacent vector clusters with a ring carrying 64 bit/cycle per
+direction, because the dominant permutation patterns of HPC/ML long-vector
+code are slide-by-1 (stencils, shifted products) and reductions — both
+neighbour-only.  On TPU the ICI torus makes ``jax.lax.ppermute`` (a physical
+neighbour hop when the permutation is a ring shift) the exact analogue.
+
+Everything here is written with ``jax.shard_map`` over the *flattened ring* of
+all lanes (cluster-major, lane-minor — the same order as the element striping),
+so a slide-by-1 of the architectural vector is one neighbour ppermute plus a
+purely local fix-up, and a full reduction is the paper's 4-stage pipeline:
+
+    SIMD/intra-lane  : local ``jnp`` reduce of the lane's VRF rows
+    inter-lane       : log2(L) ppermute hops inside the cluster
+    inter-cluster    : log2(C) ppermute hops on the ring ("log-tree fashion,
+                       utilises multiple hops for later stages" — §III-B.4)
+    broadcast        : free (recursive doubling leaves the total everywhere)
+
+The functions take ``axis_names`` = the flattened ring axes and run inside an
+enclosing ``shard_map``; the ``*_op`` wrappers at the bottom build the full
+shard_map'd callable for a :class:`~repro.core.layout.VectorMachineSpec`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .layout import VectorLayout, VectorMachineSpec
+
+
+# ---------------------------------------------------------------------------
+# In-shard_map primitives (operate on the local block, use collectives).
+# ---------------------------------------------------------------------------
+
+def ring_size(axis_names: Sequence[str]) -> int:
+    return jax.lax.axis_size(tuple(axis_names))
+
+
+def ring_pos(axis_names: Sequence[str]) -> jax.Array:
+    return jax.lax.axis_index(tuple(axis_names))
+
+
+def _shift_perm(n: int, shift: int) -> list[tuple[int, int]]:
+    """Source->dest pairs for a circular shift by ``shift`` (data moves from
+    ring position p to p-shift, i.e. each device receives from p+shift)."""
+    return [(p, (p - shift) % n) for p in range(n)]
+
+
+def ppermute_shift(x: jax.Array, axis_names: Sequence[str], shift: int,
+                   n: int) -> jax.Array:
+    """Receive the block of the device ``shift`` positions ahead on the ring."""
+    return jax.lax.ppermute(x, tuple(axis_names), perm=_shift_perm(n, shift))
+
+
+# -- slides ------------------------------------------------------------------
+
+def slide1down_local(x: jax.Array, axis_names: Sequence[str], n: int,
+                     fill: jax.Array | float = 0.0) -> jax.Array:
+    """out[i] = in[i+1], out[vl-1] = fill, on the striped layout.
+
+    Local block is the (B,) column of one lane (ring position p holds elements
+    ``i = b*n + p``).  Element i+1 lives at ring position p+1 (same row), except
+    for the last lane, whose successor wraps to lane 0, *next* row.  So: one
+    neighbour ppermute of the whole column + a row-shift fix-up on the last
+    lane only — exactly AraXL's single-hop slide. ``fill`` enters at the tail.
+    """
+    p = ring_pos(axis_names)
+    nbr = ppermute_shift(x, axis_names, 1, n)         # column of lane p+1 (mod n)
+    # Last lane got lane-0's column but needs it advanced one row.
+    advanced = jnp.concatenate([nbr[1:], jnp.full_like(nbr[:1], fill)], axis=0)
+    return jnp.where(p == n - 1, advanced, nbr)
+
+
+def slide1up_local(x: jax.Array, axis_names: Sequence[str], n: int,
+                   fill: jax.Array | float = 0.0) -> jax.Array:
+    """out[i] = in[i-1], out[0] = fill (striped layout)."""
+    p = ring_pos(axis_names)
+    nbr = ppermute_shift(x, axis_names, -1, n)        # column of lane p-1 (mod n)
+    delayed = jnp.concatenate([jnp.full_like(nbr[:1], fill), nbr[:-1]], axis=0)
+    return jnp.where(p == 0, delayed, nbr)
+
+
+def slidedown_local(x: jax.Array, axis_names: Sequence[str], n: int, k: int,
+                    fill: jax.Array | float = 0.0) -> jax.Array:
+    """out[i] = in[i+k] — decomposed into a ring hop of k mod n plus a local
+    row shift of k // n (AraXL: 'slides larger than 1 are implemented using
+    multiple 64-bit transfers or bypasses on the ring'). k is static."""
+    hop, rows = k % n, k // n
+    p = ring_pos(axis_names)
+    if hop:
+        y = ppermute_shift(x, axis_names, hop, n)
+        wrapped = p >= n - hop          # these lanes' source crossed the ring end
+    else:
+        y = x
+        wrapped = jnp.zeros((), dtype=bool)
+
+    def rshift(v: jax.Array, r: int) -> jax.Array:
+        if r == 0:
+            return v
+        r = min(r, v.shape[0])
+        pad = jnp.full((r,) + v.shape[1:], fill, v.dtype)
+        return jnp.concatenate([v[r:], pad], axis=0)
+
+    return jnp.where(wrapped, rshift(y, rows + 1), rshift(y, rows))
+
+
+# -- reductions ---------------------------------------------------------------
+
+def ring_allreduce_local(x: jax.Array, axis_names: Sequence[str], n: int,
+                         op: Callable[[jax.Array, jax.Array], jax.Array] = jnp.add,
+                         ) -> jax.Array:
+    """Recursive-doubling all-reduce built only from ring shifts.
+
+    Step k combines with the value ``2**k`` positions away — AraXL's log-tree
+    inter-lane/inter-cluster stages (later stages ride multiple ring hops).
+    Works for any n (non-power-of-2 handled by a final fold of the stragglers
+    via a masked extra step using a gather-style shift)."""
+    total = x
+    k = 1
+    while k < n:
+        total = op(total, ppermute_shift(total, axis_names, k, n))
+        k *= 2
+    if (n & (n - 1)) != 0:
+        # Non-power-of-two ring: recursive doubling over-counts. Fall back to
+        # an exact (n-1)-step ring accumulation for correctness.
+        total = x
+        acc = x
+        for _ in range(n - 1):
+            acc = ppermute_shift(acc, axis_names, 1, n)
+            total = op(total, acc)
+    return total
+
+
+def reduce_to_scalar_local(col: jax.Array, axis_names: Sequence[str], n: int,
+                           op: str = "sum") -> jax.Array:
+    """The paper's full 4-stage reduction for one vreg column.
+
+    op in {sum, max, min}. Returns the reduction replicated on every lane
+    (cluster-0/lane-0 would forward it to the scalar core via REQI)."""
+    if op == "sum":
+        local = jnp.sum(col, axis=0)
+        comb = jnp.add
+    elif op == "max":
+        local = jnp.max(col, axis=0)
+        comb = jnp.maximum
+    elif op == "min":
+        local = jnp.min(col, axis=0)
+        comb = jnp.minimum
+    else:  # pragma: no cover - guarded by callers
+        raise ValueError(f"unsupported reduction {op}")
+    return ring_allreduce_local(local, axis_names, n, comb)
+
+
+# -- ring all-gather / reduce-scatter (GLSU staging + FSDP overlap) -----------
+
+def ring_allgather_local(x: jax.Array, axis_names: Sequence[str], n: int) -> jax.Array:
+    """Classic (n-1)-step ring all-gather along axis 0: per step every device
+    forwards the block it received last step to its ring neighbour.
+    Bandwidth-optimal; each step is a single neighbour hop (RINGI discipline).
+    Returns the global array in ring order: out[j] = block of ring position j.
+    """
+    chunks = [x]
+    cur = x
+    for _ in range(n - 1):
+        cur = ppermute_shift(cur, axis_names, 1, n)   # receive from p+1
+        chunks.append(cur)
+    # arrival slot j holds the block of ring position (p + j) mod n;
+    # rotate into global order: global slot g <- arrival slot (g - p) mod n.
+    p = ring_pos(axis_names)
+    stacked = jnp.stack(chunks, axis=0)               # [n, ...] arrival order
+    idx = (jnp.arange(n) - p) % n
+    stacked = jnp.take(stacked, idx, axis=0)
+    return stacked.reshape((n * x.shape[0],) + x.shape[1:])
+
+
+def ring_reduce_scatter_local(x: jax.Array, axis_names: Sequence[str], n: int) -> jax.Array:
+    """(n-1)-step ring reduce-scatter along axis 0: ring position p ends up
+    with ``sum_over_devices(x)[p-th chunk]``, each step one neighbour hop."""
+    assert x.shape[0] % n == 0
+    p = ring_pos(axis_names)
+    stacked = jnp.stack(jnp.split(x, n, axis=0), axis=0)  # [n, B/n, ...]
+
+    def pick(i):
+        return jnp.take(stacked, (p + i) % n, axis=0)
+
+    acc = pick(1)                                     # partial for chunk p+1
+    for s in range(2, n + 1):
+        acc = ppermute_shift(acc, axis_names, 1, n)   # now partial for chunk p+s
+        acc = acc + pick(s)
+    return acc                                        # fully-summed chunk p
+
+
+# ---------------------------------------------------------------------------
+# Whole-register ops for a VectorMachineSpec (shard_map wrappers).
+# ---------------------------------------------------------------------------
+
+def _striped_shard_map(spec: VectorMachineSpec, fn, n_out: int = 1):
+    reg = spec.reg_spec(VectorLayout.STRIPED)
+    return jax.shard_map(
+        fn, mesh=spec.mesh,
+        in_specs=(reg,),
+        out_specs=reg if n_out == 1 else tuple(reg for _ in range(n_out)),
+    )
+
+
+def _local_col(x: jax.Array) -> jax.Array:
+    # striped local block is (B, 1, 1)
+    return x.reshape(x.shape[0])
+
+
+def _from_col(col: jax.Array) -> jax.Array:
+    return col.reshape(col.shape[0], 1, 1)
+
+
+def slide1down(spec: VectorMachineSpec, data: jax.Array, fill: float = 0.0) -> jax.Array:
+    axes, n = spec.ring_axes, spec.n_total_lanes
+
+    def fn(x):
+        return _from_col(slide1down_local(_local_col(x), axes, n, fill))
+
+    return _striped_shard_map(spec, fn)(data)
+
+
+def slide1up(spec: VectorMachineSpec, data: jax.Array, fill: float = 0.0) -> jax.Array:
+    axes, n = spec.ring_axes, spec.n_total_lanes
+
+    def fn(x):
+        return _from_col(slide1up_local(_local_col(x), axes, n, fill))
+
+    return _striped_shard_map(spec, fn)(data)
+
+
+def reduce_scalar(spec: VectorMachineSpec, data: jax.Array, op: str = "sum",
+                  mode: str = "ring") -> jax.Array:
+    """Full-register reduction. mode='ring' is the paper-faithful log-tree on
+    neighbour hops; mode='xla' lets XLA pick (flat all-reduce) — the §Perf
+    comparison point."""
+    axes, n = spec.ring_axes, spec.n_total_lanes
+    reg = spec.reg_spec(VectorLayout.STRIPED)
+
+    if mode == "xla":
+        red = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}[op]
+        return red(data)
+
+    def fn(x):
+        col = _local_col(x)
+        return reduce_to_scalar_local(col, axes, n, op).reshape(1, 1, 1)
+
+    out = jax.shard_map(fn, mesh=spec.mesh, in_specs=(reg,),
+                        out_specs=P(None, spec.cluster_axis, spec.lane_axis))(data)
+    return out.reshape(-1)[0]

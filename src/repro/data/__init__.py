@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticCorpus, make_pipeline
+
+__all__ = ["DataConfig", "SyntheticCorpus", "make_pipeline"]

@@ -1,0 +1,5 @@
+from .resilience import (ElasticPlan, HeartbeatMonitor, RestartPolicy,
+                         StragglerMitigator, plan_rescale)
+
+__all__ = ["ElasticPlan", "HeartbeatMonitor", "RestartPolicy",
+           "StragglerMitigator", "plan_rescale"]

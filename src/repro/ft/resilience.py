@@ -1,0 +1,135 @@
+"""Fault tolerance: heartbeats, straggler mitigation, elastic rescale.
+
+At thousand-node scale the paper's latency-tolerance argument becomes the
+fault-tolerance argument: the job must tolerate slow and dead clusters the
+way AraXL tolerates register cuts.  Mechanisms (all host-side; the device
+program stays a pure SPMD step):
+
+* HeartbeatMonitor — every host stamps a heartbeat each step; the controller
+  (host 0 / an external supervisor) marks hosts dead after ``timeout`` and
+  triggers the restart policy.  In this single-host container the monitor is
+  exercised by tests with simulated clocks.
+* RestartPolicy — exponential-backoff restart budget; decides restore step
+  (latest durable checkpoint) and whether to shrink the mesh (ElasticPlan).
+* StragglerMitigator — per-step duration EWMA per host; hosts persistently
+  > ``threshold`` x median are reported for eviction (checkpoint-restart
+  without them), the standard mitigation when within-step work stealing
+  is impossible under SPMD.
+* plan_rescale — maps a checkpoint written on mesh A to a new mesh B:
+  parameter shardings are re-derived from the same logical rules, so restore
+  is just device_put (see repro.checkpoint) — elasticity without format
+  migration.  Data order is preserved because the pipeline is a pure
+  function of (seed, step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class HostState:
+    last_beat: float
+    step: float = 0.0
+    ewma_step_s: float = 0.0
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_hosts: int, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout_s
+        self.clock = clock
+        self.hosts = {h: HostState(last_beat=clock()) for h in range(n_hosts)}
+
+    def beat(self, host: int, step: int, step_s: float | None = None):
+        st = self.hosts[host]
+        st.last_beat = self.clock()
+        st.step = step
+        if step_s is not None:
+            st.ewma_step_s = (0.9 * st.ewma_step_s + 0.1 * step_s
+                              if st.ewma_step_s else step_s)
+
+    def dead_hosts(self) -> list[int]:
+        now = self.clock()
+        return [h for h, st in self.hosts.items()
+                if now - st.last_beat > self.timeout]
+
+    def healthy(self) -> bool:
+        return not self.dead_hosts()
+
+
+class StragglerMitigator:
+    """Flag hosts whose EWMA step time exceeds threshold x median for
+    ``patience`` consecutive checks (transient slowness is tolerated, the
+    AraXL way; persistent stragglers are evicted)."""
+
+    def __init__(self, threshold: float = 1.5, patience: int = 3):
+        self.threshold = threshold
+        self.patience = patience
+        self._counts: dict[int, int] = {}
+
+    def update(self, ewma_by_host: dict[int, float]) -> list[int]:
+        vals = sorted(v for v in ewma_by_host.values() if v > 0)
+        if not vals:
+            return []
+        median = vals[len(vals) // 2]
+        flagged = []
+        for h, v in ewma_by_host.items():
+            if v > self.threshold * median:
+                self._counts[h] = self._counts.get(h, 0) + 1
+                if self._counts[h] >= self.patience:
+                    flagged.append(h)
+            else:
+                self._counts[h] = 0
+        return flagged
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    old_devices: int
+    new_devices: int
+    new_mesh_shape: tuple
+    new_global_batch: int
+    restore_step: int
+    notes: str = ""
+
+
+def plan_rescale(old_devices: int, lost_hosts: int, devices_per_host: int,
+                 mesh_axes: tuple, global_batch: int,
+                 restore_step: int) -> ElasticPlan:
+    """Shrink policy: drop whole data-parallel rows (clusters) so the model
+    axis stays intact — AraXL loses clusters, never lanes.  Batch is kept
+    divisible by the new dp size (gradient noise scale changes are logged,
+    not silently absorbed)."""
+    remaining = old_devices - lost_hosts * devices_per_host
+    model = mesh_axes[-1]
+    assert remaining >= model, "cannot keep the model axis intact"
+    dp = remaining // model
+    new_devices = dp * model
+    gb = global_batch
+    while gb % dp:
+        gb -= 1
+    return ElasticPlan(
+        old_devices=old_devices, new_devices=new_devices,
+        new_mesh_shape=(dp, model), new_global_batch=gb,
+        restore_step=restore_step,
+        notes=f"dropped to {dp} data rows; batch {global_batch}->{gb}")
+
+
+class RestartPolicy:
+    def __init__(self, max_restarts: int = 10, backoff_s: float = 5.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.max_restarts = max_restarts
+        self.backoff = backoff_s
+        self.clock = clock
+        self.restarts = 0
+        self._last = 0.0
+
+    def should_restart(self) -> bool:
+        return self.restarts < self.max_restarts
+
+    def next_delay(self) -> float:
+        d = self.backoff * (2 ** self.restarts)
+        self.restarts += 1
+        return min(d, 300.0)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's Table-I set + LM hot-spots.
+
+Layout per kernel: <name>.py holds the pl.pallas_call + BlockSpec tiling,
+ops.py the jit'd public wrapper (auto TPU/interpret/reference dispatch),
+ref.py the pure-jnp oracle used by the allclose test sweeps.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

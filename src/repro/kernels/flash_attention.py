@@ -1,0 +1,103 @@
+"""Flash attention (causal/SWA, GQA) — the LM hot-spot kernel.
+
+The long-vector connection: online softmax over KV blocks is AraXL's
+stripmined vfredmax/vexp/vfredsum pipeline with the running (m, l) carried in
+"VRF" (VMEM scratch) instead of re-reading scores — the same
+latency-tolerant streaming the paper exploits, re-tiled for MXU matmuls.
+
+Layout: q (B, Hq, S, D), k/v (B, Hkv, S, D), GQA mapped by h_kv = h_q //
+(Hq // Hkv) in the index maps.  Grid = (B*Hq, S/bq, S/bk) with the KV axis
+innermost (sequential); causal and sliding-window masking prune nothing at
+the grid level in interpret mode but the masks are exact.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window: int | None,
+                 bq: int, bk: int):
+    kv_i = pl.program_id(2)
+    q_i = pl.program_id(1)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, D)
+    v = v_ref[0].astype(jnp.float32)                     # (bk, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = q_i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == pl.num_programs(2) - 1)
+    def _flush():
+        # fully-masked rows (prefix of a window) produce l == 0 -> emit 0
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,Hq,S,D), k/v (B,Hkv,S,D) -> (B,Hq,S,D). S % bq == S % bk == 0."""
+    B, Hq, S, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert S % bq == 0 and Sk % bk == 0
+    group = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qf = q.reshape(B * Hq, S, D)
+    kf = k.reshape(B * Hkv, Sk, D)
+    vf = v.reshape(B * Hkv, Sk, D)
+
+    def kv_map(h, i, j):
+        return (h // group, j, 0)
+
+    kernel = functools.partial(_attn_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, S // bq, Sk // bk),
+        in_specs=[pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+                  pl.BlockSpec((1, bk, D), kv_map),
+                  pl.BlockSpec((1, bk, D), kv_map)],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, S, D)

@@ -1,0 +1,56 @@
+"""fmatmul — MXU-tiled matmul Pallas kernel (paper Table I, 2*LC FLOP/cycle).
+
+TPU adaptation of the paper's flagship kernel.  AraXL streams B's rows
+through 64 scalar-vector FMA lanes; the TPU analogue keeps a ``(bm, bn)``
+accumulator tile resident in VMEM (the "VRF") and streams ``(bm, bk) x
+(bk, bn)`` operand tiles from HBM through the MXU — same dataflow
+(output-stationary, operand streaming), re-blocked for a 128x128 systolic
+array instead of 64 scalar FPUs.
+
+Block shapes default to MXU-native multiples of 128; K is the innermost
+grid axis so the accumulator revisits the same VMEM tile (sequential grid
+dimension on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128, interpret: bool = False) -> jax.Array:
+    """a @ b with f32 accumulation. Shapes must tile by (bm, bn, bk)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2 and M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        (a.shape, b.shape, bm, bn, bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

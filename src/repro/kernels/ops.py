@@ -1,0 +1,149 @@
+"""Jit'd public wrappers: pick the Pallas kernel on TPU, the jnp reference
+elsewhere (the CPU dry-run lowers the jnp path; interpret=True is for tests).
+
+Wrappers also normalise shapes (padding to block multiples) so callers never
+see tiling constraints.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import matmul as _mm
+from . import reduction as _red
+from . import ref
+from . import rmsnorm as _rms
+from . import stencil as _st
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _mode(use_pallas):
+    """use_pallas: None=auto (TPU only), True=pallas (interpret off-TPU),
+    False=reference."""
+    if use_pallas is None:
+        return "pallas" if _on_tpu() else "ref"
+    if use_pallas and not _on_tpu():
+        return "interpret"
+    return "pallas" if use_pallas else "ref"
+
+
+def _pad_to(x, mult, axis):
+    r = (-x.shape[axis]) % mult
+    if r == 0:
+        return x, 0
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, r)
+    return jnp.pad(x, pad), r
+
+
+def matmul(a, b, *, use_pallas=None, bm=128, bn=128, bk=128):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.matmul(a, b)
+    a, pm = _pad_to(a, bm, 0)
+    a, pk = _pad_to(a, bk, 1)
+    b, _ = _pad_to(b, bk, 0)
+    b, pn = _pad_to(b, bn, 1)
+    out = _mm.matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=(m == "interpret"))
+    return out[:out.shape[0] - pm or None, :out.shape[1] - pn or None] \
+        if (pm or pn) else out
+
+
+def jacobi2d(x, *, use_pallas=None, bh=8, bw=256):
+    """x (H, W) unpadded; zero boundary (one sweep over the interior grid)."""
+    xp = jnp.pad(x, 1)
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.jacobi2d(xp)
+    H, W = x.shape
+    bh = min(bh, H) if H % bh else bh
+    while H % bh:
+        bh -= 1
+    bw_ = bw
+    while W % bw_:
+        bw_ //= 2
+    bw_ = max(bw_, 1)
+    return _st.jacobi2d(xp, bh=bh, bw=bw_, interpret=(m == "interpret"))
+
+
+def fconv2d(x, filt, *, use_pallas=None, bh=8, bw=256):
+    """valid conv: x (H, W), filt (fr, fc) -> (H-fr+1, W-fc+1)."""
+    fr, fc = filt.shape
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.fconv2d(x, filt)
+    H, W = x.shape[0] - fr + 1, x.shape[1] - fc + 1
+    while H % bh:
+        bh -= 1
+    bw_ = bw
+    while W % bw_ and bw_ > 1:
+        bw_ -= 1
+    return _st.fconv2d(x, filt, fr=fr, fc=fc, bh=bh, bw=bw_,
+                       interpret=(m == "interpret"))
+
+
+def dotprod(a, b, *, use_pallas=None, block=2048):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.dotprod(a, b)
+    quantum = 8 * block
+    a, _ = _pad_to(a, quantum, 0)
+    b, _ = _pad_to(b, quantum, 0)
+    return _red.dotprod(a, b, block=block, interpret=(m == "interpret"))
+
+
+def expv(x, *, use_pallas=None, block=2048):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.expv(x)
+    n = x.shape[0]
+    quantum = 8 * block
+    xp, r = _pad_to(x, quantum, 0)
+    out = _red.expv(xp, block=block, interpret=(m == "interpret"))
+    return out[:n]
+
+
+def softmax_rows(x, *, use_pallas=None, bm=8):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.softmax_rows(x)
+    R = x.shape[0]
+    while R % bm:
+        bm -= 1
+    return _red.softmax_rows(x, bm=bm, interpret=(m == "interpret"))
+
+
+def attention(q, k, v, *, causal=True, window=None, use_pallas=None,
+              bq=128, bk=128):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.attention(q, k, v, causal=causal, window=window)
+    S, Sk = q.shape[2], k.shape[2]
+    bq = min(bq, S)
+    while S % bq:
+        bq //= 2
+    bk_ = min(bk, Sk)
+    while Sk % bk_:
+        bk_ //= 2
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               bq=max(bq, 1), bk=max(bk_, 1),
+                               interpret=(m == "interpret"))
+
+
+def rmsnorm(x, gamma, *, eps=1e-6, use_pallas=None, bm=8):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.rmsnorm(x, gamma, eps)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    R = x2.shape[0]
+    while R % bm:
+        bm -= 1
+    out = _rms.rmsnorm(x2, gamma, bm=bm, eps=eps, interpret=(m == "interpret"))
+    return out.reshape(shape)

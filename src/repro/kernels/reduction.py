@@ -1,0 +1,147 @@
+"""fdotproduct / exp / softmax Pallas kernels (paper Table I).
+
+* ``dotprod`` mirrors AraXL's 4-stage reduction: the SIMD/intra-lane stage is
+  the in-block multiply-accumulate, the inter-lane/inter-cluster log-tree is
+  the sequential-grid accumulation into a VMEM scalar accumulator (on real
+  TPU the cross-chip stages live in `repro.core.ring`, not in-kernel).
+* ``expv`` evaluates the paper's range-reduction polynomial explicitly
+  (2^k * P(r), degree-6 — the 28-FLOP/element budget of Table I).
+* ``softmax_rows`` is a one-pass online-softmax over W blocks per row —
+  vfredmax / vexp / vfredsum / vfdiv fused into one VMEM-resident sweep.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# dot product
+# ---------------------------------------------------------------------------
+
+def _dot_kernel(a_ref, b_ref, o_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.sum(a * b, axis=-1, keepdims=True)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _flush():
+        o_ref[...] = jnp.sum(acc_ref[...]).reshape(1, 1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dotprod(a: jax.Array, b: jax.Array, *, block: int = 2048,
+            interpret: bool = False) -> jax.Array:
+    """sum(a*b) over 1-D inputs (length % (8*block) == 0; ops.py pads)."""
+    (n,) = a.shape
+    rows = 8                                  # sublane-friendly 2-D layout
+    assert n % (rows * block) == 0, (n, block)
+    a2 = a.reshape(rows, n // rows)
+    b2 = b.reshape(rows, n // rows)
+    cols = n // rows
+    out = pl.pallas_call(
+        _dot_kernel,
+        grid=(cols // block,),
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (0, i)),
+                  pl.BlockSpec((rows, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((rows, 1), jnp.float32)],
+        interpret=interpret,
+    )(a2, b2)
+    return out[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# exp — explicit range-reduction polynomial (the paper's 28-FLOP budget)
+# ---------------------------------------------------------------------------
+
+_LN2 = math.log(2.0)
+# degree-6 minimax-ish coefficients for e^r on r in [-ln2/2, ln2/2] (Taylor
+# is adequate at f32 for this range)
+_EXP_COEFFS = [1 / 720., 1 / 120., 1 / 24., 1 / 6., 0.5, 1.0, 1.0]
+
+
+def _exp_poly(x):
+    """exp(x) = 2**k * P(r),  x = k*ln2 + r,  |r| <= ln2/2."""
+    k = jnp.round(x / _LN2)
+    r = x - k * _LN2
+    p = jnp.full_like(r, _EXP_COEFFS[0])
+    for c in _EXP_COEFFS[1:]:                  # 6 FMAs (Horner)
+        p = p * r + c
+    return jnp.ldexp(p, k.astype(jnp.int32))
+
+
+def _exp_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    x = jnp.clip(x, -80.0, 80.0)               # the kernel's mask/merge guard
+    o_ref[...] = _exp_poly(x).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def expv(x: jax.Array, *, block: int = 2048, interpret: bool = False) -> jax.Array:
+    (n,) = x.shape
+    rows = 8
+    assert n % (rows * block) == 0, (n, block)
+    x2 = x.reshape(rows, n // rows)
+    out = pl.pallas_call(
+        _exp_kernel,
+        grid=(x2.shape[1] // block,),
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2)
+    return out.reshape(n)
+
+
+# ---------------------------------------------------------------------------
+# softmax — fused online one-pass over W blocks
+# ---------------------------------------------------------------------------
+
+def _softmax_kernel(x_ref, o_ref, m_ref, d_ref):
+    """Grid = (rows/bm, W/bw) with W innermost; two sweeps fused by the
+    revisiting output trick: pass 1 accumulates (m, d) online; the rescale
+    happens when the row's last block is processed, revisiting o_ref blocks
+    would need a second pass — instead we keep the row resident: bw == W
+    (one block per row stripe), so this kernel requires W <= block budget;
+    the ops wrapper falls back to the two-pass ref for larger W."""
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    d = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (e / d).astype(o_ref.dtype)
+    m_ref[...] = m
+    d_ref[...] = d
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def softmax_rows(x: jax.Array, *, bm: int = 8, interpret: bool = False):
+    """Row softmax for (R, W); whole row resident per block (long-vector
+    style: the row is the vector register)."""
+    R, W = x.shape
+    assert R % bm == 0, (x.shape, bm)
+    out, _, _ = pl.pallas_call(
+        _softmax_kernel,
+        grid=(R // bm,),
+        in_specs=[pl.BlockSpec((bm, W), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((bm, W), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, 1), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((R, W), x.dtype),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)),
+        interpret=interpret,
+    )(x)
+    return out

@@ -1,0 +1,37 @@
+"""Fused RMSNorm — the per-token normalization hot-spot of every LM layer.
+
+One VMEM sweep per row block: mean-square reduce (the intra-lane reduction
+stage), rsqrt, scale — no HBM round-trip for the intermediate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g_ref[...].astype(jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "eps", "interpret"))
+def rmsnorm(x: jax.Array, gamma: jax.Array, *, bm: int = 8,
+            eps: float = 1e-6, interpret: bool = False) -> jax.Array:
+    """x (R, D), gamma (D,) -> (R, D); R % bm == 0."""
+    R, D = x.shape
+    assert R % bm == 0 and gamma.shape == (D,)
+    kernel = functools.partial(_rms_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(R // bm,),
+        in_specs=[pl.BlockSpec((bm, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bm, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=interpret,
+    )(x, gamma)

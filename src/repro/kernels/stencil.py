@@ -1,0 +1,87 @@
+"""jacobi2d + fconv2d — slide-by-1 stencil kernels (paper Table I).
+
+AraXL realises the horizontal taps of a stencil with RINGI slide-by-1
+operations between neighbouring lanes/clusters.  On TPU the same data
+movement is a *halo read*: each VMEM block is fetched with a one-column
+(jacobi) or (fc-1)-column (conv) overlap, so the "slide" happens inside
+the block load instead of on an inter-lane ring — the TPU memory system's
+native idiom for neighbour access (HW adaptation recorded in DESIGN.md).
+
+Inputs are pre-padded by the ops wrappers so every output block has a full
+halo; row taps come from an ``fr``-row (or 2-row) vertical halo.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# jacobi2d: out[i,j] = 0.25*(in[i-1,j] + in[i+1,j] + in[i,j-1] + in[i,j+1])
+# on the interior of a (H+2, W+2) pre-padded input.
+# ---------------------------------------------------------------------------
+
+def _jacobi_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = 0.25 * (x[:-2, 1:-1] + x[2:, 1:-1] + x[1:-1, :-2]
+                         + x[1:-1, 2:])
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "bw", "interpret"))
+def jacobi2d(x_padded: jax.Array, *, bh: int = 8, bw: int = 256,
+             interpret: bool = False) -> jax.Array:
+    """One Jacobi sweep. ``x_padded`` is (H+2, W+2); returns (H, W)."""
+    Hp, Wp = x_padded.shape
+    H, W = Hp - 2, Wp - 2
+    assert H % bh == 0 and W % bw == 0, (x_padded.shape, bh, bw)
+    return pl.pallas_call(
+        _jacobi_kernel,
+        grid=(H // bh, W // bw),
+        # overlapping halo blocks: element-offset indexing (pl.Element dims).
+        in_specs=[pl.BlockSpec((pl.Element(bh + 2), pl.Element(bw + 2)),
+                               lambda i, j: (i * bh, j * bw))],
+        out_specs=pl.BlockSpec((bh, bw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((H, W), x_padded.dtype),
+        interpret=interpret,
+    )(x_padded)
+
+
+# ---------------------------------------------------------------------------
+# fconv2d: valid 2-D convolution with a small (fr, fc) filter.
+# Input pre-padded to (H + fr - 1, W_padded + fc - 1).
+# ---------------------------------------------------------------------------
+
+def _conv_kernel(x_ref, f_ref, o_ref, *, fr: int, fc: int):
+    x = x_ref[...]
+    f = f_ref[...]
+    bh, bw = o_ref.shape
+    acc = jnp.zeros((bh, bw), jnp.float32)
+    for r in range(fr):                      # static taps: unrolled VMEM slides
+        for c in range(fc):
+            acc += f[r, c] * x[r:r + bh, c:c + bw].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fr", "fc", "bh", "bw", "interpret"))
+def fconv2d(x_padded: jax.Array, filt: jax.Array, *, fr: int = 7, fc: int = 7,
+            bh: int = 8, bw: int = 256, interpret: bool = False) -> jax.Array:
+    Hp, Wp = x_padded.shape
+    H, W = Hp - fr + 1, Wp - fc + 1
+    assert filt.shape == (fr, fc)
+    assert H % bh == 0 and W % bw == 0, (x_padded.shape, bh, bw)
+    kernel = functools.partial(_conv_kernel, fr=fr, fc=fc)
+    return pl.pallas_call(
+        kernel,
+        grid=(H // bh, W // bw),
+        in_specs=[
+            pl.BlockSpec((pl.Element(bh + fr - 1), pl.Element(bw + fc - 1)),
+                         lambda i, j: (i * bh, j * bw)),
+            pl.BlockSpec((fr, fc), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bh, bw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((H, W), x_padded.dtype),
+        interpret=interpret,
+    )(x_padded, filt)

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The single-pod mesh is 16x16 = 256 chips
+(a TPU v5e pod); multi-pod adds a leading 2-pod axis (512 chips) — the AraXL
+hierarchy: `model` = lanes within a cluster, `data` = clusters, `pod` = the
+next ring level.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU multi-device tests."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,136 @@
+"""§Perf hillclimbing: hypothesis -> change -> re-lower -> re-analyse.
+
+Each named STRATEGY is one candidate change against the paper-faithful
+baseline; the runner produces the same per-cell roofline record as
+launch.dryrun so before/after is directly comparable.
+
+  baseline    the dry-run configuration (TP over `model` + FSDP + SP)
+  fsdp_pure   no TP: params fully sharded over ALL axes, batch over all axes
+              (ZeRO-3 / pure-DP; kills the per-layer TP all-reduces)
+  moe_a2a     token all-to-all expert parallelism (GLSU shuffle) instead of
+              replicated-token psum-combine
+  nm_half/nm1 fewer, larger microbatches (fewer FSDP gathers, more act mem)
+
+Usage:
+  python -m repro.launch.perf --arch llama3-8b --shape train_4k \
+      --strategy baseline --strategy fsdp_pure --out results/perf
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.sharding import ShardingRules, default_rules
+
+
+def _fsdp_pure_rules(mesh, cfg, shape):
+    """Map batch AND fsdp over every mesh axis; no TP ('model' unused)."""
+    names = tuple(mesh.axis_names)
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    total = 1
+    for a in all_axes:
+        total *= mesh.shape[a]
+    rules = {
+        "batch": all_axes if shape.global_batch % total == 0 else
+        tuple(a for a in ("pod", "data") if a in mesh.shape),
+        "seq": None,
+        "fsdp": all_axes,
+        "model": None,
+        "kv": None,
+        "cache_seq": "model" if shape.is_decode else None,
+        "act_seq": None,
+    }
+    return ShardingRules(mesh, rules)
+
+
+def apply_strategy(strategy: str, cfg, shape, mesh):
+    """Returns (cfg', rules_override, n_micro_override)."""
+    if strategy == "baseline":
+        return cfg, None, None
+    if strategy == "fsdp_pure":
+        return cfg, _fsdp_pure_rules(mesh, cfg, shape), 1
+    if strategy == "moe_a2a":
+        return dataclasses.replace(cfg, moe_impl="a2a"), None, None
+    if strategy == "nm_half":
+        nm = max(1, dr.n_microbatches(cfg, shape, mesh) // 2)
+        return cfg, None, nm
+    if strategy == "nm1":
+        return cfg, None, 1
+    if strategy == "moe_a2a_nm_half":
+        nm = max(1, dr.n_microbatches(cfg, shape, mesh) // 2)
+        return dataclasses.replace(cfg, moe_impl="a2a"), None, nm
+    raise ValueError(strategy)
+
+
+def analyse(arch: str, shape_name: str, strategy: str, multi: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi)
+    cfg, rules_override, nm_override = apply_strategy(strategy, cfg, shape,
+                                                      mesh)
+    # monkey-patch the dryrun cell builder's rules when overridden
+    if rules_override is not None:
+        orig = dr.build_rules
+        dr.build_rules = lambda *a, **k: rules_override
+    try:
+        if nm_override is not None:
+            orig_nm = dr.n_microbatches
+            dr.n_microbatches = lambda *a, **k: nm_override
+        try:
+            rec = dr.analyse_cell(cfg, shape, mesh,
+                                  "pod2x16x16" if multi else "pod16x16")
+        finally:
+            if nm_override is not None:
+                dr.n_microbatches = orig_nm
+    finally:
+        if rules_override is not None:
+            dr.build_rules = orig
+    rec["strategy"] = strategy
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--strategy", action="append", required=True)
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    for strat in args.strategy:
+        path = out / f"{args.arch}__{args.shape}__{strat}.json"
+        if path.exists():
+            print(f"[cached] {path}")
+            continue
+        try:
+            rec = analyse(args.arch, args.shape, strat)
+            path.write_text(json.dumps(rec, indent=2))
+            r = rec["roofline"]
+            print(f"[ok] {args.arch} x {args.shape} x {strat}: "
+                  f"compute={r['compute_s']:.3f}s mem={r['memory_s']:.3f}s "
+                  f"coll={r['collective_s']:.3f}s bound={r['bottleneck']} "
+                  f"mfu_ub={r['mfu_upper_bound']:.3f} "
+                  f"res={rec['mem_per_device']['resident_model_gib']:.1f}GiB",
+                  flush=True)
+        except Exception as e:
+            print(f"[FAIL] {strat}: {e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

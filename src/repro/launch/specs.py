@@ -1,0 +1,56 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation — the dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import lm
+from repro.parallel.sharding import ShardingRules, abstract_params, \
+    param_shardings
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Abstract model inputs for one shape cell.
+
+    train:   {"tokens": (B,S) i32[, "ctx": (B,T,d_ctx)]}
+    prefill: same as train
+    decode:  {"token": (B,1) i32, "cache": <pytree>, "pos": scalar i32
+              [, "cache_ctx" via the cache tree]}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    ctx_needed = cfg.family in ("encdec", "vlm")
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": sds((B, S), jnp.int32)}
+        if ctx_needed:
+            out["ctx"] = sds((B, lm.context_len(cfg, S), cfg.d_ctx),
+                             jnp.float32)
+        return out
+    # decode: one new token against a seq_len-deep cache
+    cache = abstract_params(lm.cache_defs(cfg, B, S))
+    return {"token": sds((B, 1), jnp.int32), "cache": cache,
+            "pos": sds((), jnp.int32)}
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeSpec, rules: ShardingRules):
+    if rules.mesh is None:
+        return None
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": rules.sharding(("batch", ""))}
+        if cfg.family in ("encdec", "vlm"):
+            out["ctx"] = rules.sharding(("batch", "", ""))
+        return out
+    cache_defs = lm.cache_defs(cfg, shape.global_batch, shape.seq_len)
+    return {"token": rules.sharding(("batch", "")),
+            "cache": param_shardings(cache_defs, rules),
+            "pos": rules.sharding(())}

@@ -1,0 +1,110 @@
+"""End-to-end training launcher (CPU-scale runs + the production recipe).
+
+``python -m repro.launch.train --arch llama3-8b --smoke --steps 50`` trains
+the reduced config on local devices; on a pod the same script runs the full
+config on the production mesh with checkpoint/restart and straggler
+monitoring wired in.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, restore_checkpoint
+from repro.checkpoint.ckpt import latest_step
+from repro.configs import get_config, get_smoke_config
+from repro.data import DataConfig, make_pipeline
+from repro.ft import HeartbeatMonitor, StragglerMitigator
+from repro.models import lm
+from repro.parallel.sharding import (abstract_params, default_rules,
+                                     init_params, param_shardings)
+from repro.train import OptConfig, TrainState, make_train_step
+from repro.train.optimizer import adamw_init
+
+
+def run(arch: str, *, smoke: bool = True, steps: int = 50,
+        global_batch: int = 8, seq_len: int = 64, lr: float = 3e-3,
+        ckpt_dir: str | None = None, ckpt_every: int = 25,
+        n_microbatches: int = 1, resume: bool = True, log_every: int = 10,
+        seed: int = 0) -> dict:
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    rules = default_rules(None)          # single-process CPU run
+    opt_cfg = OptConfig(lr=lr, warmup_steps=max(2, steps // 10),
+                        total_steps=steps)
+
+    key = jax.random.key(seed)
+    params = init_params(lm.model_defs(cfg), key)
+    state = TrainState(params, adamw_init(params, opt_cfg))
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                      global_batch=global_batch, seed=seed)
+    start_step = 0
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if mgr and resume and latest_step(ckpt_dir) is not None:
+        state, start_step, _ = restore_checkpoint(ckpt_dir, state)
+        start_step = int(start_step)
+        print(f"[train] resumed from step {start_step}")
+
+    pipe = make_pipeline(dcfg, start_step=start_step)
+    step_fn = jax.jit(make_train_step(cfg, rules, opt_cfg,
+                                      n_microbatches=n_microbatches))
+
+    monitor = HeartbeatMonitor(n_hosts=1)
+    straggler = StragglerMitigator()
+    losses = []
+    t_prev = time.time()
+    for step in range(start_step, steps):
+        tokens = jnp.asarray(next(pipe))
+        batch = {"tokens": tokens}
+        if cfg.family in ("encdec", "vlm"):
+            rng = np.random.default_rng(step)
+            T = lm.context_len(cfg, seq_len)
+            batch["ctx"] = jnp.asarray(
+                rng.normal(size=(global_batch, T, cfg.d_ctx)) * 0.1,
+                jnp.float32)
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.time() - t_prev
+        t_prev = time.time()
+        monitor.beat(0, step, dt)
+        straggler.update({0: monitor.hosts[0].ewma_step_s})
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[train] step {step:5d} loss {loss:8.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} ({dt*1e3:.0f} ms)",
+                  flush=True)
+        if mgr and (step + 1) % ckpt_every == 0:
+            mgr.save_async(state, step + 1)
+    if mgr:
+        mgr.wait()
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "start_step": start_step}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full published config (pod scale)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    out = run(args.arch, smoke=not args.full, steps=args.steps,
+              global_batch=args.batch, seq_len=args.seq, lr=args.lr,
+              ckpt_dir=args.ckpt, n_microbatches=args.microbatches)
+    print(f"[train] done: first loss {out['losses'][0]:.4f} "
+          f"final {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,708 @@
+"""Model sublayers: GQA/SWA/cross attention, SwiGLU, MoE (EP), Mamba2 SSD.
+
+All pure functions over param pytrees built from `PV` definitions
+(`repro.parallel.sharding`).  Math in f32, storage in cfg.dtype.  Every
+function has a train/prefill form and, where stateful, a decode form.
+
+Sharding is by logical axes: batch -> (pod,data), heads/ff/experts/vocab ->
+model (TP/EP), params FSDP over (pod,data).  Communication patterns map onto
+the AraXL interconnects as described in DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ATTN, MAMBA, MLP, MOE, XATTN, ModelConfig
+from repro.parallel.sharding import PV, ShardingRules, constraint
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, Dh), positions (..., S) or (S,)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs      # (..., S, half)
+    ang = ang[..., :, None, :]                                     # broadcast heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    dt = cfg.dtype
+    return {
+        "norm": PV((d,), jnp.float32, ("",), "ones"),
+        "wq": PV((d, cfg.n_heads * hd), dt, ("fsdp", "model")),
+        "wk": PV((d, cfg.n_kv_heads * hd), dt, ("fsdp", "model")),
+        "wv": PV((d, cfg.n_kv_heads * hd), dt, ("fsdp", "model")),
+        "wo": PV((cfg.n_heads * hd, d), dt, ("model", "fsdp")),
+    }
+
+
+def _qkv(p, x, cfg: ModelConfig, rules, positions, rotate: bool):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    # constrain the flat projections (always divisible by |model|), then
+    # reshape to heads — kv-head counts below |model| (glm4: kv=2) stay
+    # shardable on the fused dim.
+    qf = constraint(xn @ p["wq"], rules, "batch", None, "model")
+    kf = constraint(xn @ p["wk"], rules, "batch", None, "model")
+    vf = constraint(xn @ p["wv"], rules, "batch", None, "model")
+    q = qf.reshape(B, S, cfg.n_heads, hd)
+    k = kf.reshape(B, S, cfg.n_kv_heads, hd)
+    v = vf.reshape(B, S, cfg.n_kv_heads, hd)
+    if rotate:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k, H: int, rules: ShardingRules):
+    """Repeat kv heads up to H so the head dim shards cleanly over `model`
+    even for sub-|model| kv counts (glm4: kv=2)."""
+    Hkv = k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+    return constraint(k, rules, "batch", None, "model", None)
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, rules: ShardingRules, *,
+                  causal: bool, q_offset: int = 0,
+                  q_chunk: int = 512) -> jax.Array:
+    """Exact chunked attention: scan over q blocks against full K/V.
+
+    f32 softmax; causal + sliding-window masks; the chunk body is
+    checkpointed so backward recomputes score blocks instead of saving
+    every softmax matrix (flash-style memory behaviour in pure XLA).
+    q (B,S,H,Dh), k/v (B,T,Hkv,Dh) -> (B,S,H,Dh)."""
+    B, S, H, Dh = q.shape
+    T = k.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+    q = constraint(q, rules, "batch", None, "model", None)
+    k = _expand_kv(k, H, rules)
+    v = _expand_kv(v, H, rules)
+    cq = min(q_chunk, S)
+    while S % cq:
+        cq -= 1
+    n_chunks = S // cq
+    k_pos = jnp.arange(T)
+
+    def block(carry, qc_off):
+        qc, off = qc_off
+        s = jnp.einsum("bqhd,bthd->bhqt", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        q_pos = off + q_offset + jnp.arange(cq)
+        mask = jnp.ones((cq, T), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if cfg.window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < cfg.window
+        s = jnp.where(mask[None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqt,bthd->bqhd", pr, v.astype(jnp.float32))
+        return carry, o.astype(q.dtype)
+
+    qs = q.reshape(B, n_chunks, cq, H, Dh).transpose(1, 0, 2, 3, 4)
+    offs = jnp.arange(n_chunks) * cq
+    _, outs = jax.lax.scan(jax.checkpoint(block), None, (qs, offs))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
+    return out
+
+
+def attn_layer(p, x, cfg: ModelConfig, rules: ShardingRules, positions,
+               *, causal: bool = True) -> jax.Array:
+    """Training / prefill self-attention (residual included)."""
+    B, S, d = x.shape
+    q, k, v = _qkv(p, x, cfg, rules, positions, rotate=True)
+    o = _sdpa_chunked(q, k, v, cfg, rules, causal=causal)
+    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    o = constraint(o, rules, "batch", None, None)
+    return x + o.astype(x.dtype)
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array          # (B, W, Hkv, Dh) — pre-rotated keys
+    v: jax.Array
+
+
+def attn_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.window) if cfg.window else seq_len
+
+
+def attn_cache_defs(cfg: ModelConfig, batch: int, seq_len: int) -> AttnCache:
+    W = attn_cache_len(cfg, seq_len)
+    shp = (batch, W, cfg.n_kv_heads, cfg.head_dim)
+    return AttnCache(
+        PV(shp, cfg.dtype, ("batch", "cache_seq", "kv", ""), "zeros"),
+        PV(shp, cfg.dtype, ("batch", "cache_seq", "kv", ""), "zeros"))
+
+
+def attn_layer_decode(p, x, cache: AttnCache, pos, cfg: ModelConfig,
+                      rules: ShardingRules):
+    """One-token step. pos: scalar int32 (current position).
+
+    Full-attention caches index directly; SWA caches are ring buffers of
+    length `window` (entry i holds the newest position ≡ i mod W)."""
+    B, S1, d = x.shape                      # S1 == 1
+    W = cache.k.shape[1]
+    hd = cfg.head_dim
+    positions = jnp.full((S1,), 0) + pos
+    q, k, v = _qkv(p, x, cfg, rules, positions[None, :], rotate=True)
+    slot = pos % W
+    mesh = rules.mesh
+    dist_cache = mesh is not None and rules.axis("cache_seq") == "model"
+    if not dist_cache:
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+        ck = constraint(ck, rules, "batch", "cache_seq", "kv", None)
+        cv = constraint(cv, rules, "batch", "cache_seq", "kv", None)
+
+    def _scores_out(qg, ckb, cvb, idx, pos_):
+        """Local masked scores + (m, l, o) partials for index slice idx."""
+        if cfg.window:
+            k_pos = pos_ - ((pos_ - idx) % W)   # newest position ≡ i (mod W)
+            valid = k_pos >= 0
+        else:
+            k_pos = idx
+            valid = idx <= pos_
+        s = jnp.einsum("bqhgd,bthd->bhgqt", qg.astype(jnp.float32),
+                       ckb.astype(jnp.float32)) / math.sqrt(hd)
+        mask = valid & (k_pos <= pos_)
+        if cfg.window:
+            mask &= (pos_ - k_pos) < cfg.window
+        s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+        return s, cvb.astype(jnp.float32)
+
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, S1, cfg.n_kv_heads, G, hd)
+    if dist_cache:
+        # distributed decode attention: each model shard WRITES the new
+        # token into its cache slice if the slot falls in range (no
+        # replicate-and-reshard of the cache), scores its slice, and the
+        # softmax is merged with tiny pmax/psum collectives — AraXL's
+        # inter-cluster log-tree reduction (never gather the cache).
+        W_loc = W // mesh.shape["model"]
+        cspec = rules.spec(("batch", "cache_seq", "kv", ""))
+
+        def body(qg_, ckb, cvb, kb, vb, pos_):
+            base = jax.lax.axis_index("model") * W_loc
+            sl = pos_ % W
+            ls = jnp.clip(sl - base, 0, W_loc - 1)
+            inrange = (sl >= base) & (sl < base + W_loc)
+            ck_new = jnp.where(
+                inrange,
+                jax.lax.dynamic_update_slice(ckb, kb, (0, ls, 0, 0)), ckb)
+            cv_new = jnp.where(
+                inrange,
+                jax.lax.dynamic_update_slice(cvb, vb, (0, ls, 0, 0)), cvb)
+            idx = base + jnp.arange(W_loc)
+            s, cvf = _scores_out(qg_, ck_new, cv_new, idx, pos_)
+            m = jax.lax.pmax(jnp.max(s, axis=-1, keepdims=True), "model")
+            pr = jnp.exp(s - m)
+            l = jax.lax.psum(jnp.sum(pr, axis=-1, keepdims=True), "model")
+            o = jax.lax.psum(
+                jnp.einsum("bhgqt,bthd->bqhgd", pr, cvf), "model")
+            ln = jnp.maximum(l, 1e-20).squeeze(-1).transpose(0, 3, 1, 2)
+            return o / ln[..., None], ck_new, cv_new
+
+        bq = rules.spec(("batch", "", "", "", ""))
+        bk = rules.spec(("batch", "", "", ""))
+        o, ck, cv = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(bq, cspec, cspec, bk, bk, P()),
+            out_specs=(bq, cspec, cspec))(
+                qg, cache.k, cache.v, k.astype(cache.k.dtype),
+                v.astype(cache.v.dtype), jnp.asarray(pos, jnp.int32))
+    else:
+        s, cvf = _scores_out(qg, ck, cv, jnp.arange(W), pos)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqt,bthd->bqhgd", pr, cvf)
+    o = o.reshape(B, S1, cfg.n_heads * hd).astype(x.dtype) @ p["wo"]
+    return x + o.astype(x.dtype), AttnCache(ck, cv)
+
+
+def attn_layer_prefill(p, x, cfg: ModelConfig, rules, positions, cache_len):
+    """Prefill: run attention AND return the populated cache."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, rules, positions, rotate=True)
+    o = _sdpa_chunked(q, k, v, cfg, rules, causal=True)
+    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    W = cache_len
+    if W >= S:
+        pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
+        ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+    else:                                   # SWA ring buffer: last W tokens,
+        tail_k, tail_v = k[:, S - W:], v[:, S - W:]   # placed at slot pos%W
+        roll = (S - W) % W
+        ck = jnp.roll(tail_k, shift=roll, axis=1)
+        cv = jnp.roll(tail_v, shift=roll, axis=1)
+    return x + o.astype(x.dtype), AttnCache(ck, cv)
+
+
+# -- cross attention ---------------------------------------------------------
+
+def xattn_defs(cfg: ModelConfig) -> dict:
+    return attn_defs(cfg, cross=True)
+
+
+def xattn_layer(p, x, ctx, cfg: ModelConfig, rules: ShardingRules):
+    """Cross-attention to a context (encoder output / image embeddings).
+    ctx (B, T, d); no positional rotation (learned content addressing)."""
+    B, S, d = x.shape
+    hd = cfg.head_dim
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = (xn @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (ctx @ p["wk"]).reshape(B, ctx.shape[1], cfg.n_kv_heads, hd)
+    v = (ctx @ p["wv"]).reshape(B, ctx.shape[1], cfg.n_kv_heads, hd)
+    o = _sdpa_chunked(q, k, v, cfg, rules, causal=False)
+    o = o.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+    return x + o.astype(x.dtype)
+
+
+class XAttnCache(NamedTuple):
+    k: jax.Array          # (B, T, Hkv, Dh) — projected context, fixed
+    v: jax.Array
+
+
+def xattn_cache_defs(cfg: ModelConfig, batch: int) -> XAttnCache:
+    shp = (batch, cfg.n_ctx_tokens, cfg.n_kv_heads, cfg.head_dim)
+    return XAttnCache(PV(shp, cfg.dtype, ("batch", "", "kv", ""), "zeros"),
+                      PV(shp, cfg.dtype, ("batch", "", "kv", ""), "zeros"))
+
+
+def xattn_prefill_cache(p, ctx, cfg: ModelConfig) -> XAttnCache:
+    B, T, _ = ctx.shape
+    hd = cfg.head_dim
+    k = (ctx @ p["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+    v = (ctx @ p["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+    return XAttnCache(k, v)
+
+
+def xattn_layer_decode(p, x, cache: XAttnCache, cfg: ModelConfig,
+                       rules: ShardingRules):
+    B, S1, d = x.shape
+    hd = cfg.head_dim
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = (xn @ p["wq"]).reshape(B, S1, cfg.n_heads, hd)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, S1, cfg.n_kv_heads, G, hd)
+    s = jnp.einsum("bqhgd,bthd->bhgqt", qg.astype(jnp.float32),
+                   cache.k.astype(jnp.float32)) / math.sqrt(hd)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqt,bthd->bqhgd", pr, cache.v.astype(jnp.float32))
+    o = o.reshape(B, S1, cfg.n_heads * hd).astype(x.dtype) @ p["wo"]
+    return x + o.astype(x.dtype), cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig) -> dict:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    return {
+        "norm": PV((d,), jnp.float32, ("",), "ones"),
+        "wi": PV((d, f), dt, ("fsdp", "model")),
+        "wg": PV((d, f), dt, ("fsdp", "model")),
+        "wo": PV((f, d), dt, ("model", "fsdp")),
+    }
+
+
+def mlp_layer(p, x, cfg: ModelConfig, rules: ShardingRules):
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    h = silu(xn @ p["wg"]) * (xn @ p["wi"])
+    h = constraint(h, rules, "batch", None, "model")
+    o = h @ p["wo"]
+    return x + o.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE — top-k routing, capacity dispatch, expert parallelism over `model`
+# ---------------------------------------------------------------------------
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    E = cfg.n_experts
+    ffe = cfg.d_ff_expert or cfg.d_ff
+    # expert dim over `model` when divisible (EP), else ff dim (expert-TP)
+    return {
+        "norm": PV((d,), jnp.float32, ("",), "ones"),
+        "router": PV((d, E), jnp.float32, ("fsdp", "")),
+        "wi": PV((E, d, ffe), dt, ("model", "fsdp", "")),
+        "wg": PV((E, d, ffe), dt, ("model", "fsdp", "")),
+        "wo": PV((E, ffe, d), dt, ("model", "", "fsdp")),
+    }
+
+
+def moe_defs_tp(cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    E = cfg.n_experts
+    ffe = cfg.d_ff_expert or cfg.d_ff
+    return {
+        "norm": PV((d,), jnp.float32, ("",), "ones"),
+        "router": PV((d, E), jnp.float32, ("fsdp", "")),
+        "wi": PV((E, d, ffe), dt, ("", "fsdp", "model")),
+        "wg": PV((E, d, ffe), dt, ("", "fsdp", "model")),
+        "wo": PV((E, ffe, d), dt, ("", "model", "fsdp")),
+    }
+
+
+def moe_mode(cfg: ModelConfig, rules: ShardingRules) -> str:
+    if rules.mesh is None or "model" not in rules.mesh.shape:
+        return "local"
+    if cfg.moe_tp:
+        return "tp"
+    msize = rules.mesh.shape["model"]
+    assert cfg.n_experts % msize == 0, \
+        f"{cfg.name}: E={cfg.n_experts} not divisible by model={msize}; " \
+        "set moe_tp=True"
+    if cfg.moe_impl == "a2a" and rules.axis("act_seq"):
+        return "ep_a2a"
+    return "ep"
+
+
+def _dispatch_ffn(xf, top_idx, top_gate, wi, wg, wo, e_base, E_loc, C):
+    """Capacity-dispatch N tokens to E_loc local experts and combine.
+
+    xf (N, d) f32; top_idx/top_gate (N, k); expert weights (E_loc, d, f) etc.
+    Returns the local experts' combined contribution (N, d) f32.
+    """
+    N, d = xf.shape
+    wdt = wi.dtype
+    out = jnp.zeros((N, d), jnp.float32)
+    for j in range(E_loc):                       # static, small (<= E/|model|)
+        e = e_base + j
+        sel = (top_idx == e)                     # (N, k)
+        gate = jnp.sum(jnp.where(sel, top_gate, 0.0), axis=-1)    # (N,)
+        chosen = sel.any(axis=-1)
+        pos = jnp.cumsum(chosen.astype(jnp.int32)) - 1            # (N,)
+        slot = jnp.where(chosen & (pos < C), pos, C)              # C = drop
+        # FFN math stays fully in the weight dtype: any f32 operand (fwd OR
+        # bwd cotangent) promotes the whole 94-layer expert stack to f32 via
+        # XLA loop-invariant hoisting — 7 GiB of converts in the dry-run.
+        buf = jnp.zeros((C + 1, d), wdt).at[slot].set(xf.astype(wdt))[:C]
+        h = silu(buf @ wg[j]) * (buf @ wi[j])
+        y = (h @ wo[j]).astype(jnp.float32)                       # (C, d)
+        back = jnp.where(slot < C, slot, C)
+        gathered = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)])[back]
+        out = out + gate[:, None] * gathered
+    return out
+
+
+def moe_layer(p, x, cfg: ModelConfig, rules: ShardingRules):
+    """Top-k MoE with per-shard capacity.  EP mode: experts sharded over
+    `model` via shard_map (tokens replicated on the model axis — the GLSU
+    "shuffle stage" becomes a local scatter + cross-lane psum combine).
+    TP mode (n_experts < |model|): all experts everywhere, ff dim sharded.
+    """
+    B, S, d = x.shape
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    k = cfg.experts_per_token
+    E = cfg.n_experts
+    logits = (xn.astype(jnp.float32) @ p["router"])            # (B,S,E)
+    top_gate, top_idx = jax.lax.top_k(logits, k)
+    top_gate = jax.nn.softmax(top_gate, axis=-1)               # normalised
+    mode = moe_mode(cfg, rules)
+
+    def run_local(xn_, ti_, tg_, wi, wg, wo, e_base, E_loc):
+        N = xn_.shape[0] * xn_.shape[1]
+        C = max(1, int(math.ceil(N * k / E * cfg.capacity_factor)))
+        xf = xn_.reshape(N, d).astype(jnp.float32)
+        y = _dispatch_ffn(xf, ti_.reshape(N, k), tg_.reshape(N, k),
+                          wi, wg, wo, e_base, E_loc, C)
+        return y.reshape(xn_.shape)
+
+    if mode == "local":
+        y = run_local(xn, top_idx, top_gate, p["wi"], p["wg"], p["wo"], 0, E)
+        return x + y.astype(x.dtype)
+
+    mesh = rules.mesh
+    msize = mesh.shape["model"]
+    bspec = rules.spec(("batch", "", ""))   # respects batch divisibility
+
+    if mode == "tp":
+        # every shard runs all experts on its token shard, ff sharded
+        def body(xn_, ti_, tg_, wi, wg, wo):
+            y = run_local(xn_, ti_, tg_, wi, wg, wo, 0, E)
+            return jax.lax.psum(y, "model")
+
+        y = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(bspec, bspec, bspec,
+                      P(None, None, "model"), P(None, None, "model"),
+                      P(None, "model", None)),
+            out_specs=bspec)(xn, top_idx, top_gate, p["wi"], p["wg"], p["wo"])
+        return x + y.astype(x.dtype)
+
+    if mode == "ep_a2a" and S % msize == 0:
+        return x + _moe_ep_a2a(p, xn, top_idx, top_gate, cfg, rules
+                               ).astype(x.dtype)
+
+    # EP (replicated-token variant): experts sharded over `model`, tokens
+    # replicated on the model axis, combine via psum.  Simple but pays a
+    # token-space all-reduce per layer — §Perf replaces it with ep_a2a.
+    E_loc = E // msize
+
+    def body(xn_, ti_, tg_, wi, wg, wo):
+        e_base = jax.lax.axis_index("model") * E_loc
+        # e_base is traced; shift indices so the static loop sees local ids
+        ti_loc = ti_ - e_base
+        y = run_local(xn_, ti_loc, tg_, wi, wg, wo, 0, E_loc)
+        return jax.lax.psum(y, "model")
+
+    y = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(bspec, bspec, bspec,
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=bspec)(xn, top_idx, top_gate, p["wi"], p["wg"], p["wo"])
+    return x + y.astype(x.dtype)
+
+
+def _moe_ep_a2a(p, xn, top_idx, top_gate, cfg: ModelConfig,
+                rules: ShardingRules):
+    """All-to-all expert parallelism — the GLSU discipline: shuffle the
+    (small) token buffers between expert shards instead of replicating
+    tokens / gathering weights.
+
+    Each model shard dispatches its OWN sequence slice (act_seq sharding)
+    into per-expert capacity buffers for all E experts, a2a's buffers so
+    shard i holds its E/msize experts' tokens from every source, runs the
+    FFN, a2a's back and combines.  Wire per layer ~= 4 x dispatched-token
+    bytes — two orders of magnitude below the psum-combine variant at
+    qwen3 scale (measured in §Perf)."""
+    mesh = rules.mesh
+    msize = mesh.shape["model"]
+    B, S, d = xn.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    E_loc = E // msize
+    S_loc = S // msize
+    bspec_tok = rules.spec(("batch", "act_seq", ""))
+    bspec_idx = rules.spec(("batch", "act_seq", ""))
+    wdt = p["wi"].dtype
+
+    def body(xn_, ti_, tg_, wi, wg, wo):
+        B_loc = xn_.shape[0]
+        N = B_loc * S_loc
+        C = max(1, int(math.ceil(N * k / E * cfg.capacity_factor)))
+        xf = xn_.reshape(N, d).astype(wdt)
+        ti = ti_.reshape(N * k)
+        tg = tg_.reshape(N * k).astype(jnp.float32)
+        tok = jnp.repeat(jnp.arange(N), k)
+
+        # rank of each (token, choice) within its expert (stable by token)
+        order = jnp.argsort(ti, stable=True)
+        sorted_e = ti[order]
+        start = jnp.searchsorted(sorted_e, jnp.arange(E))
+        ranks_sorted = jnp.arange(N * k) - start[sorted_e]
+        ranks = jnp.zeros(N * k, jnp.int32).at[order].set(
+            ranks_sorted.astype(jnp.int32))
+        keep = ranks < C
+        slot = jnp.where(keep, ti * C + ranks, E * C)             # OOB drops
+        buf = jnp.zeros((E * C + 1, d), wdt).at[slot].set(xf[tok])[:-1]
+        buf = buf.reshape(E, C, d)
+
+        # GLSU shuffle: expert-major blocks to their owning shard
+        recv = jax.lax.all_to_all(buf, "model", split_axis=0,
+                                  concat_axis=1, tiled=True)      # (E_loc, C*msize, d)
+        h = silu(jnp.einsum("ecd,edf->ecf", recv, wg)) \
+            * jnp.einsum("ecd,edf->ecf", recv, wi)
+        y = jnp.einsum("ecf,efd->ecd", h.astype(wdt), wo)
+        back = jax.lax.all_to_all(y, "model", split_axis=1,
+                                  concat_axis=0, tiled=True)      # (E, C, d)
+        flat = jnp.concatenate([back.reshape(E * C, d),
+                                jnp.zeros((1, d), y.dtype)])
+        picked = flat[slot].astype(jnp.float32)                   # (N*k, d)
+        w = jnp.where(keep, tg, 0.0)[:, None]
+        out = jnp.zeros((N, d), jnp.float32).at[tok].add(w * picked)
+        return out.reshape(B_loc, S_loc, d)
+
+    y = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(bspec_tok, bspec_idx, bspec_idx,
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=bspec_tok)(xn, top_idx, top_gate,
+                             p["wi"], p["wg"], p["wo"])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, chunked) — arXiv:2405.21060
+# ---------------------------------------------------------------------------
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    di = cfg.d_inner_ssm
+    N = cfg.ssm_state
+    H = cfg.n_ssm_heads
+    kc = cfg.ssm_conv
+    return {
+        "norm": PV((d,), jnp.float32, ("",), "ones"),
+        "in_proj": PV((d, 2 * di + 2 * N + H), dt, ("fsdp", "model")),
+        "conv_w": PV((kc, di + 2 * N), dt, ("", "model")),
+        "conv_b": PV((di + 2 * N,), dt, ("model",), "zeros"),
+        "A_log": PV((H,), jnp.float32, ("model",), "zeros"),
+        "D": PV((H,), jnp.float32, ("model",), "ones"),
+        "dt_bias": PV((H,), jnp.float32, ("model",), "zeros"),
+        "gnorm": PV((di,), jnp.float32, ("model",), "ones"),
+        "out_proj": PV((di, d), dt, ("model", "fsdp")),
+    }
+
+
+def _ssd_chunked(xh, dtv, Bm, Cm, A, chunk: int, state_in=None):
+    """Chunked state-space dual form.
+
+    xh (B,S,H,P) f32; dtv (B,S,H); Bm/Cm (B,S,N); A (H,) negative.
+    Returns y (B,S,H,P), final state (B,H,P,N)."""
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+    r = lambda t: t.reshape((Bsz, nc, Q) + t.shape[2:])
+    xc, dtc, Bc, Cc = r(xh), r(dtv), r(Bm), r(Cm)
+
+    dA = dtc * A[None, None, None, :]                 # (B,nc,Q,H) negative
+    dA_cs = jnp.cumsum(dA, axis=2)                    # within-chunk cumsum
+    # decay from q' to q (q >= q'): exp(dA_cs[q] - dA_cs[q'])
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    xdt = xc * dtc[..., None]                         # (B,nc,Q,H,P)
+    # intra-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bcqn,bckn,bcqkh,bckhp->bcqhp",
+                        Cc, Bc, L.transpose(0, 1, 2, 3, 4), xdt)
+    # chunk-final states
+    decay_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_end, xdt)
+    # inter-chunk recurrence (the ring/slide stage when sequence-sharded)
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))        # (B,nc,H)
+
+    def scan_fn(s_prev, inp):
+        s_c, dec = inp                                # (B,H,P,N), (B,H)
+        s_in = s_prev
+        s_next = s_c + dec[:, :, None, None] * s_prev
+        return s_next, s_in
+
+    init = (jnp.zeros((Bsz, H, Pd, N), jnp.float32) if state_in is None
+            else state_in)
+    s_final, s_ins = jax.lax.scan(
+        scan_fn, init,
+        (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_ins = s_ins.transpose(1, 0, 2, 3, 4)            # (B,nc,H,P,N)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, s_ins, jnp.exp(dA_cs))
+    y = (y_diag + y_off).reshape(Bsz, S, H, Pd)
+    return y, s_final
+
+
+def _mamba_project(p, x, cfg: ModelConfig):
+    di, N, H = cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    proj = xn @ p["in_proj"]                          # (B,S,2di+2N+H)
+    z, xc, Bm, Cm, dtv = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return z, jnp.concatenate([xc, Bm, Cm], -1), dtv
+
+
+def mamba_layer(p, x, cfg: ModelConfig, rules: ShardingRules,
+                conv_state=None, ssm_state=None, return_state: bool = False):
+    """Train/prefill Mamba2 block (full sequence, chunked SSD)."""
+    B, S, d = x.shape
+    di, N, H = cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    kc = cfg.ssm_conv
+    z, xbc, dtv = _mamba_project(p, x, cfg)
+    # depthwise causal conv over (x, B, C)
+    pad = jnp.zeros((B, kc - 1, xbc.shape[-1]), xbc.dtype) \
+        if conv_state is None else conv_state
+    xbc_p = jnp.concatenate([pad, xbc], axis=1)
+    conv = sum(xbc_p[:, i:i + S] * p["conv_w"][i][None, None]
+               for i in range(kc)) + p["conv_b"][None, None]
+    conv = silu(conv)
+    xc, Bm, Cm = jnp.split(conv, [di, di + N], axis=-1)
+    xh = xc.reshape(B, S, H, cfg.ssm_head_dim).astype(jnp.float32)
+    dtb = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y, s_final = _ssd_chunked(xh, dtb, Bm.astype(jnp.float32),
+                              Cm.astype(jnp.float32), A, cfg.ssm_chunk,
+                              ssm_state)
+    y = y + p["D"][None, None, :, None] * xh          # skip
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y.astype(x.dtype) * silu(z), p["gnorm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    res = x + out.astype(x.dtype)
+    if return_state:
+        new_conv = xbc_p[:, S:S + kc - 1] if kc > 1 else pad
+        return res, (new_conv, s_final.astype(jnp.float32))
+    return res
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array       # (B, kc-1, di+2N)
+    state: jax.Array      # (B, H, P, N) f32
+
+
+def mamba_cache_defs(cfg: ModelConfig, batch: int) -> MambaCache:
+    di, N, H = cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    return MambaCache(
+        PV((batch, cfg.ssm_conv - 1, di + 2 * N), cfg.dtype,
+           ("batch", "", "model"), "zeros"),
+        PV((batch, H, cfg.ssm_head_dim, N), jnp.float32,
+           ("batch", "model", "", ""), "zeros"))
+
+
+def mamba_layer_decode(p, x, cache: MambaCache, cfg: ModelConfig,
+                       rules: ShardingRules):
+    """Single-token recurrent step: state <- dA*state + dt*B (x) ; y = C.state."""
+    B, S1, d = x.shape
+    di, N, H = cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    kc = cfg.ssm_conv
+    z, xbc, dtv = _mamba_project(p, x, cfg)
+    window = jnp.concatenate([cache.conv, xbc], axis=1)       # (B, kc, ch)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv = silu(conv)[:, None, :]
+    xc, Bm, Cm = jnp.split(conv, [di, di + N], axis=-1)
+    xh = xc.reshape(B, H, cfg.ssm_head_dim).astype(jnp.float32)
+    dtb = jax.nn.softplus(dtv.astype(jnp.float32)[:, 0] + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dtb * A[None])                               # (B,H)
+    Bv = Bm[:, 0].astype(jnp.float32)                         # (B,N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dtb, xh, Bv)
+    state = cache.state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cv) + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, di)
+    y = rmsnorm(y.astype(x.dtype) * silu(z), p["gnorm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_conv = window[:, 1:] if kc > 1 else cache.conv
+    return x + out.astype(x.dtype), MambaCache(new_conv, state)

@@ -1,0 +1,379 @@
+"""Whole-model assembly: embeddings -> scan over layer periods -> head.
+
+One code path serves all ten assigned architectures: the repeating layer
+``period`` (a tuple of layers, each a tuple of sublayer kinds) drives both
+parameter stacking (compile-time O(one period) via lax.scan) and execution.
+Families:
+
+    dense / moe      decoder-only periods of (attn, mlp|moe)
+    ssm              (mamba,) periods
+    hybrid (jamba)   8-layer periods mixing mamba/attn and moe/mlp
+    encdec           + a bidirectional encoder; decoder layers carry xattn
+    vlm              + a frontend projection; xattn layers attend image tokens
+
+Three entry points per model: ``forward_train`` (loss), ``prefill``
+(populate caches, return last logits), ``decode_step`` (one token).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, MAMBA, MLP, MOE, XATTN, ModelConfig
+from repro.parallel.sharding import PV, ShardingRules, constraint
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def _stack(defs, n: int):
+    return jax.tree.map(
+        lambda pv: PV((n,) + pv.shape, pv.dtype, ("",) + pv.logical, pv.init,
+                      pv.scale),
+        defs, is_leaf=lambda x: isinstance(x, PV))
+
+
+def _sublayer_defs(kind: str, cfg: ModelConfig):
+    if kind == ATTN:
+        return L.attn_defs(cfg)
+    if kind == XATTN:
+        return L.xattn_defs(cfg)
+    if kind == MAMBA:
+        return L.mamba_defs(cfg)
+    if kind == MLP:
+        return L.mlp_defs(cfg)
+    if kind == MOE:
+        return L.moe_defs_tp(cfg) if cfg.moe_tp else L.moe_defs(cfg)
+    raise ValueError(kind)
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    d, V, dt = cfg.d_model, cfg.vocab_size, cfg.dtype
+    # embed/head are vocab-sharded over `model` ONLY: FSDP-sharding their
+    # d_model dim makes every loss chunk / embed lookup all-gather the whole
+    # table over `data` (measured 8x wire blow-up in the dry-run).
+    Vp = cfg.padded_vocab
+    defs: dict[str, Any] = {
+        "embed": PV((Vp, d), dt, ("model", ""), "normal", 0.02),
+        "final_norm": PV((d,), jnp.float32, ("",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = PV((d, Vp), dt, ("", "model"))
+    period = {}
+    for li, layer in enumerate(cfg.layer_period):
+        slots = {}
+        for si, kind in enumerate(layer):
+            slots[f"s{si}_{kind}"] = _stack(_sublayer_defs(kind, cfg),
+                                            cfg.n_periods)
+        period[f"l{li}"] = slots
+    defs["period"] = period
+    if cfg.family == "encdec":
+        enc_layer = {"attn": L.attn_defs(cfg), "mlp": L.mlp_defs(cfg)}
+        defs["encoder"] = {"layers": _stack(enc_layer, cfg.n_enc_layers),
+                           "norm": PV((d,), jnp.float32, ("",), "ones")}
+    if cfg.d_ctx:
+        defs["ctx_proj"] = PV((cfg.d_ctx, d), dt, ("", "fsdp"))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Cache definitions (decode)
+# ---------------------------------------------------------------------------
+
+def cache_defs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    period = {}
+    for li, layer in enumerate(cfg.layer_period):
+        slots = {}
+        for si, kind in enumerate(layer):
+            if kind == ATTN:
+                slots[f"s{si}_{kind}"] = _stack(
+                    L.attn_cache_defs(cfg, batch, seq_len)._asdict(),
+                    cfg.n_periods)
+            elif kind == XATTN:
+                slots[f"s{si}_{kind}"] = _stack(
+                    L.xattn_cache_defs(cfg, batch)._asdict(), cfg.n_periods)
+            elif kind == MAMBA:
+                slots[f"s{si}_{kind}"] = _stack(
+                    L.mamba_cache_defs(cfg, batch)._asdict(), cfg.n_periods)
+        period[f"l{li}"] = slots
+    return period
+
+
+# ---------------------------------------------------------------------------
+# Context (encoder / image frontend)
+# ---------------------------------------------------------------------------
+
+def context_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.family == "encdec":
+        return max(cfg.ssm_chunk, seq_len // 4)      # speech frames downsampled
+    return cfg.n_ctx_tokens
+
+
+def encode_context(params, ctx_embeds, cfg: ModelConfig, rules: ShardingRules):
+    """Frontend stub output -> d_model context for xattn (encoder if encdec)."""
+    ctx = ctx_embeds.astype(cfg.dtype)
+    if "ctx_proj" in params:
+        ctx = ctx @ params["ctx_proj"]
+    ctx = constraint(ctx, rules, "batch", None, None)
+    if cfg.family != "encdec":
+        return ctx
+
+    enc = params["encoder"]
+    S = ctx.shape[1]
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        x = L.attn_layer(lp["attn"], x, cfg, rules, positions, causal=False)
+        x = L.mlp_layer(lp["mlp"], x, cfg, rules)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    ctx, _ = jax.lax.scan(body, ctx, enc["layers"])
+    return L.rmsnorm(ctx, enc["norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder trunk
+# ---------------------------------------------------------------------------
+
+def _apply_slot(kind, sp, x, cfg, rules, positions, ctx):
+    if kind == ATTN:
+        return L.attn_layer(sp, x, cfg, rules, positions, causal=True)
+    if kind == XATTN:
+        return L.xattn_layer(sp, x, ctx, cfg, rules)
+    if kind == MAMBA:
+        return L.mamba_layer(sp, x, cfg, rules)
+    if kind == MLP:
+        return L.mlp_layer(sp, x, cfg, rules)
+    if kind == MOE:
+        return L.moe_layer(sp, x, cfg, rules)
+    raise ValueError(kind)
+
+
+def trunk(params, x, cfg: ModelConfig, rules: ShardingRules, positions,
+          ctx=None):
+    period = params["period"]
+    kinds = cfg.layer_period
+
+    def body(xc, pp):
+        for li, layer in enumerate(kinds):
+            for si, kind in enumerate(layer):
+                sp = pp[f"l{li}"][f"s{si}_{kind}"]
+                xc = _apply_slot(kind, sp, xc, cfg, rules, positions, ctx)
+                xc = constraint(xc, rules, "batch", "act_seq", None)
+        return xc, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.unroll_layers:
+        for i in range(cfg.n_periods):
+            x, _ = body(x, jax.tree.map(lambda t: t[i], period))
+        return x
+    x, _ = jax.lax.scan(body, x, period)
+    return x
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, rules: ShardingRules):
+    mesh = rules.mesh
+    if mesh is None or "model" not in mesh.shape or \
+            cfg.padded_vocab % mesh.shape["model"]:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        return constraint(x, rules, "batch", "act_seq", None)
+
+    # Explicit vocab-sharded lookup: masked local gather + psum over `model`.
+    # (The GSPMD gather fallback replicates the whole table per device —
+    # >1 GiB for 150k vocabularies; this is the AraXL byte-map discipline:
+    # touch only the locally-resident rows, reduce on the lane axis.)
+    from jax.sharding import PartitionSpec as P
+    V_loc = cfg.padded_vocab // mesh.shape["model"]
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bspec = rules.spec(("batch", ""))
+
+    def body(tok, emb):
+        lo = jax.lax.axis_index("model") * V_loc
+        ids = tok - lo
+        ok = (ids >= 0) & (ids < V_loc)
+        safe = jnp.where(ok, ids, 0)
+        x = emb[safe]                          # emb local block (V_loc, d)
+        x = jnp.where(ok[..., None], x, 0)
+        return jax.lax.psum(x, "model")
+
+    x = jax.shard_map(body, mesh=mesh,
+                      in_specs=(bspec, P("model", None)),
+                      out_specs=bspec)(tokens, params["embed"])
+    return constraint(x, rules, "batch", "act_seq", None)
+
+
+def _mask_pad_vocab(logits, cfg: ModelConfig):
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    ids = jnp.arange(cfg.padded_vocab)
+    return jnp.where(ids >= cfg.vocab_size, jnp.asarray(-1e30, logits.dtype),
+                     logits)
+
+
+def logits_fn(params, x, cfg: ModelConfig, rules: ShardingRules):
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = _mask_pad_vocab(x @ head, cfg)
+    return constraint(logits, rules, "batch", None, "model")
+
+
+def _ce_terms(logits, targets):
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return lse - picked
+
+
+def ce_loss(params, x, targets, mask, cfg: ModelConfig,
+            rules: ShardingRules):
+    """Mean masked next-token CE.  With cfg.loss_chunk the sequence is
+    processed in checkpointed blocks so the f32 logits (B, S, V) are never
+    materialised whole — the decisive memory lever for 100k+ vocabularies."""
+    B, S, _ = x.shape
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    chunk = cfg.loss_chunk
+    if chunk <= 0 or S <= chunk or S % chunk:
+        logits = constraint(_mask_pad_vocab(x @ head, cfg), rules,
+                            "batch", None, "model")
+        tok_loss = _ce_terms(logits, targets)
+        return jnp.sum(tok_loss * mask) / jnp.sum(mask)
+
+    nc = S // chunk
+    xs = (x.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3),
+          targets.reshape(B, nc, chunk).transpose(1, 0, 2),
+          mask.reshape(B, nc, chunk).transpose(1, 0, 2))
+
+    @jax.checkpoint
+    def body(acc, blk):
+        xc, tc, mc = blk
+        logits = constraint(_mask_pad_vocab(xc @ head, cfg), rules,
+                            "batch", None, "model")
+        return acc + jnp.sum(_ce_terms(logits, tc) * mc), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    return total / jnp.sum(mask)
+
+
+def forward_train(params, tokens, cfg: ModelConfig, rules: ShardingRules,
+                  ctx_embeds=None):
+    """tokens (B, S) -> mean next-token cross-entropy loss."""
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    ctx = None
+    if cfg.family in ("encdec", "vlm"):
+        ctx = encode_context(params, ctx_embeds, cfg, rules)
+    x = embed_tokens(params, tokens, cfg, rules)
+    x = trunk(params, x, cfg, rules, positions, ctx)
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0)
+    return ce_loss(params, x, targets, mask, cfg, rules)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules,
+            cache_seq_len: int, ctx_embeds=None):
+    """tokens (B, S) -> (cache, last-token logits)."""
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    ctx = None
+    if cfg.family in ("encdec", "vlm"):
+        ctx = encode_context(params, ctx_embeds, cfg, rules)
+    x = embed_tokens(params, tokens, cfg, rules)
+    kinds = cfg.layer_period
+    W = L.attn_cache_len(cfg, cache_seq_len)
+
+    def body(xc, pp):
+        caches = {}
+        for li, layer in enumerate(kinds):
+            lcaches = {}
+            for si, kind in enumerate(layer):
+                key = f"s{si}_{kind}"
+                sp = pp[f"l{li}"][key]
+                if kind == ATTN:
+                    xc, c = L.attn_layer_prefill(sp, xc, cfg, rules,
+                                                 positions, W)
+                    lcaches[key] = c._asdict()
+                elif kind == XATTN:
+                    xc = L.xattn_layer(sp, xc, ctx, cfg, rules)
+                    lcaches[key] = L.xattn_prefill_cache(sp, ctx, cfg)._asdict()
+                elif kind == MAMBA:
+                    xc, (conv, state) = L.mamba_layer(sp, xc, cfg, rules,
+                                                      return_state=True)
+                    lcaches[key] = {"conv": conv.astype(cfg.dtype),
+                                    "state": state}
+                else:
+                    xc = _apply_slot(kind, sp, xc, cfg, rules, positions, ctx)
+            caches[f"l{li}"] = lcaches
+        xc = constraint(xc, rules, "batch", None, None)
+        return xc, caches
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.unroll_layers:                      # cost-analysis variants
+        caches = []
+        for i in range(cfg.n_periods):
+            x, c = body(x, jax.tree.map(lambda t: t[i], params["period"]))
+            caches.append(c)
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        x, cache = jax.lax.scan(body, x, params["period"])
+    logits = logits_fn(params, x[:, -1:], cfg, rules)
+    return cache, logits
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig,
+                rules: ShardingRules):
+    """token (B, 1), pos scalar int32 -> (logits (B,1,V), new cache)."""
+    x = embed_tokens(params, token, cfg, rules)
+    kinds = cfg.layer_period
+
+    def body(xc, pc):
+        pp, cc = pc
+        new_caches = {}
+        for li, layer in enumerate(kinds):
+            lcaches = {}
+            for si, kind in enumerate(layer):
+                key = f"s{si}_{kind}"
+                sp = pp[f"l{li}"][key]
+                if kind == ATTN:
+                    c = L.AttnCache(**cc[f"l{li}"][key])
+                    xc, c = L.attn_layer_decode(sp, xc, c, pos, cfg, rules)
+                    lcaches[key] = c._asdict()
+                elif kind == XATTN:
+                    c = L.XAttnCache(**cc[f"l{li}"][key])
+                    xc, c = L.xattn_layer_decode(sp, xc, c, cfg, rules)
+                    lcaches[key] = c._asdict()
+                elif kind == MAMBA:
+                    c = L.MambaCache(**cc[f"l{li}"][key])
+                    xc, c = L.mamba_layer_decode(sp, xc, c, cfg, rules)
+                    lcaches[key] = c._asdict()
+                else:
+                    xc = _apply_slot(kind, sp, xc, cfg, rules, None, None)
+            new_caches[f"l{li}"] = lcaches
+        return xc, new_caches
+
+    if cfg.unroll_layers:                      # cost-analysis variants
+        caches = []
+        for i in range(cfg.n_periods):
+            x, c = body(x, jax.tree.map(lambda t: t[i],
+                                        (params["period"], cache)))
+            caches.append(c)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["period"], cache))
+    logits = logits_fn(params, x, cfg, rules)
+    return logits, new_cache

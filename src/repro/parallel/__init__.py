@@ -1,0 +1,6 @@
+from .sharding import (ShardingRules, default_rules, logical_to_spec,
+                       constraint, param_shardings, abstract_params,
+                       init_params, PV)
+
+__all__ = ["ShardingRules", "default_rules", "logical_to_spec", "constraint",
+           "param_shardings", "abstract_params", "init_params", "PV"]

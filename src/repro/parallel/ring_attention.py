@@ -1,0 +1,85 @@
+"""Ring attention — RINGI applied to sequence-parallel attention.
+
+The sequence is sharded across the ring of clusters ("data" axis); KV blocks
+rotate one neighbour hop per step (exactly AraXL's slide-by-1 bus) while
+every device accumulates its queries' online-softmax state.  After n-1 hops
+every query has seen every key with only neighbour communication — the
+paper's scalability argument (no all-to-all, latency hidden behind the local
+attention compute) applied to 500k-token contexts.
+
+Exact (online softmax), causal + sliding-window aware, GQA via kv repeat.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.ring import ppermute_shift
+
+
+def _block_attn(q, k, v, q_pos, k_pos, scale, causal, window):
+    s = jnp.einsum("bqhd,bthd->bhqt", q, k) * scale
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)                     # (b,h,q,1)
+    m = jnp.maximum(m, -1e30)                                  # empty rows
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqt,bthd->bhqd", p, v)
+    return m, l, o
+
+
+def ring_attention(q, k, v, mesh: Mesh, *, axis: str = "data",
+                   causal: bool = True, window: int | None = None):
+    """q (B,S,H,D), k/v (B,S,Hkv,D) globally; S sharded over ``axis``.
+
+    Returns (B,S,H,D) with the same sharding. One ppermute per step — the
+    KV blocks ride the ring while online-softmax state stays local."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    n = mesh.shape[axis]
+    S_loc = S // n
+    scale = 1.0 / math.sqrt(D)
+
+    def body(q_loc, k_loc, v_loc):
+        pos = jax.lax.axis_index(axis)
+        q_pos = pos * S_loc + jnp.arange(S_loc)
+        qf = q_loc.astype(jnp.float32)
+        m = jnp.full((B, H, S_loc, 1), -jnp.inf, jnp.float32)
+        l = jnp.zeros((B, H, S_loc, 1), jnp.float32)
+        o = jnp.zeros((B, H, S_loc, D), jnp.float32)
+        kc, vc = k_loc.astype(jnp.float32), v_loc.astype(jnp.float32)
+        src = pos
+        for step in range(n):
+            k_pos = src * S_loc + jnp.arange(S_loc)
+            mb, lb, ob = _block_attn(qf, kc, vc, q_pos, k_pos, scale,
+                                     causal, window)
+            m_new = jnp.maximum(m, mb)
+            alpha = jnp.exp(jnp.where(jnp.isfinite(m), m - m_new, -jnp.inf))
+            beta = jnp.exp(jnp.where(jnp.isfinite(mb), mb - m_new, -jnp.inf))
+            l = l * alpha + lb * beta
+            o = o * alpha + ob * beta
+            m = m_new
+            if step < n - 1:                      # rotate KV one hop (RINGI)
+                kc = ppermute_shift(kc, (axis,), 1, n)
+                vc = ppermute_shift(vc, (axis,), 1, n)
+                src = (src + 1) % n
+        safe = jnp.where(l == 0.0, 1.0, l)
+        out = (o / safe).transpose(0, 2, 1, 3)    # (B,S_loc,H,D)
+        return out.astype(q_loc.dtype)
+
+    spec_q = P(None, axis, None, None)
+    return jax.shard_map(body, mesh=mesh,
+                         in_specs=(spec_q, spec_q, spec_q),
+                         out_specs=spec_q)(q, k, v)

@@ -1,0 +1,169 @@
+"""Logical-axis sharding (the REQI/GLSU discipline applied to an LM).
+
+Every parameter is declared once as a :class:`PV` (shape, dtype, logical axis
+names, init law); everything else — random init, ShapeDtypeStructs for the
+dry-run, NamedShardings, checkpoint manifests — derives from that single
+definition.
+
+Logical axes (mapped by :class:`ShardingRules`):
+
+    batch   activation batch            -> (pod, data)   ["clusters"]
+    seq     sequence (SP cells only)    -> (pod, data)
+    fsdp    parameter FSDP shard dim    -> (pod, data)   [ZeRO-3]
+    model   TP dim (heads/ff/experts/vocab) -> model     ["lanes"]
+    layers / none                        -> unsharded
+
+AraXL reading: the `model` axis is the intra-cluster lane group (fast,
+fine-grained TP collectives), `data`(x`pod`) the cluster ring (gradient /
+FSDP traffic rides ring-friendly reduce-scatter/all-gather).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PV:
+    """Parameter definition: one source of truth."""
+    shape: tuple
+    dtype: Any = jnp.float32
+    logical: tuple = ()          # one name per dim ('' / None = replicated)
+    init: str = "normal"         # normal | zeros | ones | scaled
+    scale: float | None = None   # stddev override
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh | None = None
+    rules: dict | None = None
+
+    def axis(self, name: str | None):
+        if not name or self.rules is None:
+            return None
+        return self.rules.get(name)
+
+    def spec(self, logical: Sequence[str | None]) -> P:
+        if self.mesh is None:
+            return P()
+        phys = []
+        used = set()
+        for name in logical:
+            ax = self.axis(name)
+            # never map one mesh axis twice in a single spec
+            flat = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                         if a) if ax else ()
+            flat = tuple(a for a in flat if a not in used and
+                         a in self.mesh.shape)
+            used.update(flat)
+            if not flat:
+                phys.append(None)
+            elif len(flat) == 1:
+                phys.append(flat[0])
+            else:
+                phys.append(flat)
+        return P(*phys)
+
+    def sharding(self, logical) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+def default_rules(mesh: Mesh | None, *, seq_sharded: bool = False,
+                  fsdp: bool = True, kv_heads: int | None = None,
+                  cache_seq: str | None = None, act_seq: bool = False,
+                  batch: int | None = None) -> ShardingRules:
+    """Build the logical->physical map for one (config, shape) cell.
+
+    kv_heads: shard the kv-head dim over `model` only when divisible
+              (glm4's kv=2 stays replicated).
+    cache_seq: "model" for decode cells (KV seq TP + distributed-softmax
+               merge — the inter-cluster log-tree reduce), None otherwise.
+    batch: global batch; batch dim is sharded only when divisible by |dp|.
+    """
+    if mesh is None:
+        return ShardingRules(None, None)
+    names = set(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in names) or None
+    dp_size = 1
+    if dp:
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+    msize = mesh.shape.get("model", 1)
+    rules = {
+        "batch": dp if (batch is None or batch % max(1, dp_size) == 0) else None,
+        "seq": dp if seq_sharded else None,
+        "fsdp": dp if fsdp else None,
+        "model": "model" if "model" in names else None,
+        "kv": ("model" if ("model" in names and kv_heads
+                           and kv_heads % msize == 0) else None),
+        "cache_seq": cache_seq,
+        # Megatron-SP: the residual stream between layers is sequence-sharded
+        # over `model` — 16x smaller layer-boundary activations (decisive for
+        # the 94-layer / 72-layer giants), same wire cost as the TP ARs it
+        # replaces (AR = RS + AG).
+        "act_seq": "model" if (act_seq and "model" in names) else None,
+        # intra-machine vector-register axes (AraXL core library)
+        "cluster": "cluster" if "cluster" in names else None,
+        "lane": "lane" if "lane" in names else None,
+    }
+    return ShardingRules(mesh, rules)
+
+
+def logical_to_spec(rules: ShardingRules, logical) -> P:
+    return rules.spec(logical)
+
+
+def constraint(x: jax.Array, rules: ShardingRules, *logical) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+    if rules.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec(logical)))
+
+
+# ---------------------------------------------------------------------------
+# Param-tree derivations
+# ---------------------------------------------------------------------------
+
+def _is_pv(x):
+    return isinstance(x, PV)
+
+
+def abstract_params(defs) -> Any:
+    return jax.tree.map(
+        lambda pv: jax.ShapeDtypeStruct(pv.shape, pv.dtype), defs,
+        is_leaf=_is_pv)
+
+
+def param_shardings(defs, rules: ShardingRules):
+    if rules.mesh is None:
+        return jax.tree.map(lambda pv: None, defs, is_leaf=_is_pv)
+    return jax.tree.map(
+        lambda pv: NamedSharding(rules.mesh, rules.spec(pv.logical)),
+        defs, is_leaf=_is_pv)
+
+
+def _init_one(pv: PV, key) -> jax.Array:
+    if pv.init == "zeros":
+        return jnp.zeros(pv.shape, pv.dtype)
+    if pv.init == "ones":
+        return jnp.ones(pv.shape, pv.dtype)
+    fan_in = pv.shape[-2] if len(pv.shape) >= 2 else pv.shape[-1]
+    std = pv.scale if pv.scale is not None else 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, pv.shape, jnp.float32) * std).astype(pv.dtype)
+
+
+def init_params(defs, key) -> Any:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_pv)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(pv, k) for pv, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)

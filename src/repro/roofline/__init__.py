@@ -1,0 +1,5 @@
+from .analysis import (HW, collective_bytes, parse_collectives,
+                       roofline_terms, wire_seconds)
+
+__all__ = ["HW", "collective_bytes", "parse_collectives", "roofline_terms",
+           "wire_seconds"]

@@ -1,0 +1,215 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e targets).
+
+    compute    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)      [per-chip FLOPs:
+                 cost_analysis() of the SPMD-partitioned module is per-device]
+    memory     = HLO_bytes / (chips x 819 GB/s)
+    collective = wire_bytes / 50 GB/s per link (ring factors below)
+
+collective_bytes is NOT in cost_analysis: we parse the compiled HLO text and
+sum operand/result sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, with ring-algorithm wire factors:
+
+    all-gather      (n-1)/n x result_bytes      received per device
+    reduce-scatter  (n-1)/n x operand_bytes
+    all-reduce      2(n-1)/n x operand_bytes    (RS + AG)
+    all-to-all      (n-1)/n x operand_bytes
+    collective-perm operand_bytes               (one neighbour hop)
+
+`scan` caveat (DESIGN.md §8): XLA cost analysis counts a while body ONCE.
+The dry-run therefore compiles 1-period and 2-period model variants and
+extrapolates: total(L) = f(1) + (L-1) x (f(2) - f(1)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+HW = {
+    "peak_flops": 197e12,      # bf16 per chip
+    "hbm_bw": 819e9,           # bytes/s per chip
+    "ici_bw": 50e9,            # bytes/s per link (~ring direction)
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?(?:\.\d+)?\(")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> list[dict]:
+    """Every collective op in the module: kind, result bytes, group size."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[1][:60]:
+            continue                        # counted at -start
+        kind = m.group(2)
+        rbytes = _shape_bytes(m.group(1))
+        g = _GROUPS_IOTA_RE.search(line)
+        if g:
+            group = int(g.group(2))
+        else:
+            g2 = _GROUPS_RE.search(line)
+            group = len(g2.group(1).split(",")) if g2 else 1
+        out.append({"kind": kind, "bytes": rbytes, "group": group,
+                    "line": line.strip()[:160]})
+    return out
+
+
+_WIRE_FACTOR = {
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: (n - 1) / max(n, 1),
+    "all-reduce": lambda n: 2 * (n - 1) / max(n, 1),
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def collective_bytes(colls: list[dict]) -> dict:
+    """Aggregate wire bytes per device, by kind and total."""
+    by_kind: dict[str, float] = {}
+    total = 0.0
+    for c in colls:
+        wire = c["bytes"] * _WIRE_FACTOR[c["kind"]](max(1, c["group"]))
+        by_kind[c["kind"]] = by_kind.get(c["kind"], 0.0) + wire
+        total += wire
+    by_kind["total"] = total
+    by_kind["count"] = len(colls)
+    return by_kind
+
+
+def wire_seconds(wire_bytes: float) -> float:
+    return wire_bytes / HW["ici_bw"]
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float) -> dict:
+    compute = flops_per_dev / HW["peak_flops"]
+    memory = bytes_per_dev / HW["hbm_bw"]
+    coll = wire_seconds(wire_bytes_per_dev)
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": coll}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]
+                              if k.endswith("_s") else -1)
+    terms["step_s_lower_bound"] = max(compute, memory, coll)
+    return terms
+
+
+def extrapolate(f1: float, f2: float, n_periods: int) -> float:
+    """total(L) from 1- and 2-period compiles (scan body counted once)."""
+    return f1 + (n_periods - 1) * (f2 - f1)
+
+
+def resident_model_bytes(cfg, shape, n_dev: int, nm: int,
+                         args_bytes: float) -> float:
+    """Analytic per-device HBM *residency* (TPU buffer-reuse semantics).
+
+    The CPU backend's temp arena double-buffers where a TPU executable
+    aliases (donated params/opt updated in place, grad buffers reused), so
+    the measured arena is an upper bound.  Analytic residency =
+
+        args (exact, from the compile)
+      + grads (one param-sized buffer, acc dtype)
+      + grad accumulator (if microbatched)
+      + layer-boundary activation saves (seq-sharded residual x L)
+      + transient workspace (attention chunk + MoE dispatch + CE chunk),
+        bounded by the largest single layer's working set x2.
+    """
+    bpe = 2
+    P = cfg.n_params()
+    dp = max(1, n_dev // 16)
+    grads = P * bpe / n_dev
+    acc = grads if (shape.kind == "train" and nm > 1) else 0.0
+    if shape.kind != "train":
+        return args_bytes + 2**30            # caches are args; +1GiB workspace
+    B_mb_loc = max(1, shape.global_batch // nm // dp)
+    msize = min(16, n_dev)
+    x_save = cfg.n_layers * B_mb_loc * shape.seq_len * cfg.d_model * bpe \
+        / msize                              # act_seq-sharded residual saves
+    # largest layer working set (recompute live set), x2 safety
+    ffe = cfg.d_ff_expert or cfg.d_ff or cfg.d_inner_ssm
+    work = 2 * (B_mb_loc * shape.seq_len
+                * max(cfg.d_model, ffe // msize * 4) * 4)
+    ce = 2 * B_mb_loc * max(1, cfg.loss_chunk or 512) \
+        * cfg.vocab_size // msize * 4
+    return args_bytes + grads + acc + x_save + work + ce
+
+
+def memory_model_bytes(cfg, shape, n_dev: int, nm: int) -> float:
+    """Analytic per-device HBM traffic (fusion-aware second opinion).
+
+    The CPU backend's cost_analysis counts every unfused op's operands, a
+    ~5x overestimate of TPU HBM traffic; this model counts only the
+    traffic a fused TPU program must pay:
+
+      weights   3x local bf16 params per microbatch (fwd + bwd + remat re-read)
+      optimizer 16 B/param local (m, v, master read+write, grad, param)
+      acts      c_act x tokens_loc x d x 2 B per layer (c_act ~= 12:
+                residual save+load, qkv/mlp intermediates, f32 upcasts)
+      scores    2 x B_loc x H_loc x S x T x 4 B per attention layer (chunked)
+      caches    decode: full KV/state cache read per step
+    """
+    bpe = 2
+    P_loc = cfg.n_params() * bpe / n_dev
+    d = cfg.d_model
+    if shape.kind == "train":
+        B_loc_mb = max(1, shape.global_batch // nm
+                       // max(1, n_dev // 16))         # dp shards ~ n_dev/16
+        dp = max(1, n_dev // 16)
+        B_loc_mb = max(1, shape.global_batch // nm // dp)
+        toks = B_loc_mb * shape.seq_len
+        c_act = 12.0
+        act = nm * cfg.n_layers * c_act * toks * d * bpe
+        n_attn = sum(1 for layer in cfg.layer_period
+                     for k in layer if k in ("attn", "xattn")) * cfg.n_periods
+        H_loc = max(1, cfg.n_heads // 16)
+        scores = nm * n_attn * 2 * B_loc_mb * H_loc * shape.seq_len \
+            * shape.seq_len * 4
+        weights = nm * 3 * P_loc
+        opt = 16 * cfg.n_params() / n_dev
+        return act + scores + weights + opt
+    if shape.kind == "prefill":
+        dp = max(1, n_dev // 16)
+        B_loc = max(1, shape.global_batch // dp)
+        toks = B_loc * shape.seq_len
+        act = cfg.n_layers * 6.0 * toks * d * bpe
+        H_loc = max(1, cfg.n_heads // 16)
+        n_attn = sum(1 for layer in cfg.layer_period
+                     for k in layer if k in ("attn", "xattn")) * cfg.n_periods
+        scores = n_attn * B_loc * H_loc * shape.seq_len * shape.seq_len * 4
+        return act + P_loc + scores
+    # decode: weights + cache residency read once per token
+    W = min(shape.seq_len, cfg.window) if cfg.window else shape.seq_len
+    n_attn = sum(1 for layer in cfg.layer_period
+                 for k in layer if k == "attn") * cfg.n_periods
+    cache = n_attn * 2 * shape.global_batch * W * cfg.n_kv_heads \
+        * cfg.head_dim * bpe / n_dev
+    return P_loc + cache

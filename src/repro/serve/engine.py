@@ -1,0 +1,129 @@
+"""Batched serving engine: continuous batching over prefill + decode steps.
+
+The long-vector reading of serving: a decode batch is a vector register —
+requests are elements, the engine keeps the register full (slot reuse on
+completion), the KV/state caches are the per-lane VRF chunks.
+
+Engine loop:
+  1. admit: pack waiting requests into free slots (up to ``max_batch``),
+     prefill them (left-padded to a common length bucket) and merge their
+     caches into the live batch cache at their slots;
+  2. step: one fused decode_step for the whole batch;
+  3. retire: slots whose request hit EOS/max_tokens free up.
+
+This container runs it at smoke scale on CPU; the same engine drives the
+dry-run decode shapes on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.parallel.sharding import ShardingRules, init_params
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (len,) int32
+    max_new_tokens: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 256
+    eos_id: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, rules: ShardingRules,
+                 scfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.rules = rules
+        self.scfg = scfg
+        B, S = scfg.max_batch, scfg.max_seq
+        cache_defs = lm.cache_defs(cfg, B, S)
+        self.cache = jax.tree.map(
+            lambda pv: jnp.zeros(pv.shape, pv.dtype), cache_defs,
+            is_leaf=lambda x: hasattr(x, "logical"))
+        self.slots: list[Request | None] = [None] * B
+        self.slot_pos = np.zeros(B, np.int32)       # per-slot next position
+        self.waiting: list[Request] = []
+        self.finished: list[Request] = []
+
+        self._prefill = jax.jit(
+            lambda p, t: lm.prefill(p, t, cfg, rules, S))
+        self._step = jax.jit(
+            lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg, rules))
+        self._ctx = None
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def _admit(self):
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        while free and self.waiting:
+            slot = free.pop(0)
+            req = self.waiting.pop(0)
+            # prefill this request alone (bucketed batch prefill is the
+            # batch>1 path; slot-merge is identical)
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            cache, logits = self._prefill(self.params, toks)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            req.out.append(nxt)
+            # merge this request's cache rows into the live batch cache
+            self.cache = jax.tree.map(
+                lambda big, small: big.at[:, slot].set(small[:, 0])
+                if big.ndim >= 2 else big, self.cache, cache)
+            self.slots[slot] = req
+            self.slot_pos[slot] = len(req.prompt)
+
+    # -- decode --------------------------------------------------------------
+    def _live(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def step(self):
+        self._admit()
+        live = self._live()
+        if not live:
+            return False
+        B = self.scfg.max_batch
+        tok = np.zeros((B, 1), np.int32)
+        for i in live:
+            tok[i, 0] = self.slots[i].out[-1]
+        # single shared position: engine advances the max; per-slot masks in
+        # the attention layer handle shorter slots (pos monotone per slot)
+        pos = int(self.slot_pos[live].max())
+        logits, self.cache = self._step(self.params, jnp.asarray(tok),
+                                        self.cache, jnp.int32(pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i in live:
+            req = self.slots[i]
+            t = int(nxt[i])
+            req.out.append(t)
+            self.slot_pos[i] += 1
+            if t == self.scfg.eos_id or \
+                    len(req.out) >= req.max_new_tokens or \
+                    self.slot_pos[i] >= self.scfg.max_seq - 1:
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        for _ in range(max_steps):
+            if not self.step() and not self.waiting:
+                break
+        return self.finished

@@ -1,0 +1,14 @@
+"""Cycle-approximate AraXL performance model.
+
+Reproduces the paper's evaluation without RTL: weak-scaling performance
+(Fig. 6), interface latency tolerance (Fig. 7) and PPA scaling (Tables
+II/III), from instruction traces of the paper's kernels replayed through a
+chained-unit pipeline model.
+"""
+from .params import AraXLParams, ara2_params, araxl_params
+from .engine import simulate, SimResult
+from .kernels import build_trace, KERNEL_BUILDERS
+from .trace import TraceMachine
+
+__all__ = ["AraXLParams", "ara2_params", "araxl_params", "simulate",
+           "SimResult", "build_trace", "KERNEL_BUILDERS", "TraceMachine"]

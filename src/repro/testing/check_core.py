@@ -1,0 +1,119 @@
+"""Multi-device correctness checks for repro.core (run under 8 fake devices).
+
+Usage: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+       python -m repro.testing.check_core [C] [L]
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(C: int = 4, L: int = 2) -> None:
+    from repro.core import isa_kernels, make_machine
+    from repro.core.layout import mem_to_striped_host
+
+    assert len(jax.devices()) >= C * L, "need more fake devices"
+    n = C * L
+    rng = np.random.default_rng(0)
+
+    for glsu_mode in ("staged", "direct"):
+        for reduce_mode in ("ring", "xla"):
+            v = make_machine(C, L, vlen_bits=4096, glsu_mode=glsu_mode,
+                             reduce_mode=reduce_mode, dtype=jnp.float64)
+
+            # --- GLSU round trip + exact byte map --------------------------
+            vl = n * n * 3
+            x = rng.normal(size=vl)
+            r = v.vle(x)
+            np.testing.assert_array_equal(np.asarray(r.data),
+                                          mem_to_striped_host(x, C, L))
+            np.testing.assert_array_equal(np.asarray(v.vse(r)), x)
+
+            # --- slides -----------------------------------------------------
+            s = np.asarray(v.vse(v.vslide1down(r, fill=-7.0)))
+            exp = np.concatenate([x[1:], [-7.0]])
+            np.testing.assert_allclose(s, exp)
+            s = np.asarray(v.vse(v.vslide1up(r, fill=-3.0)))
+            np.testing.assert_allclose(s, np.concatenate([[-3.0], x[:-1]]))
+            for k in (1, 2, n - 1, n, n + 3, 2 * n):
+                s = np.asarray(v.vse(v.vslidedown(r, k)))
+                exp = np.concatenate([x[k:], np.zeros(k)])
+                np.testing.assert_allclose(
+                    s, exp, err_msg=f"slidedown k={k} {glsu_mode}/{reduce_mode}")
+
+            # --- reductions --------------------------------------------------
+            np.testing.assert_allclose(float(v.vredsum(r)), x.sum(), rtol=1e-12)
+            np.testing.assert_allclose(float(v.vredmax(r)), x.max(), rtol=0)
+
+            # --- elementwise + masks ----------------------------------------
+            y = rng.normal(size=vl)
+            ry = v.vle(y)
+            np.testing.assert_allclose(np.asarray(v.vse(v.vfma(r, ry, ry))),
+                                       x * y + y, rtol=1e-12)
+            m = v.vmslt(r, 0.0)
+            np.testing.assert_array_equal(int(v.vcpop(m)), int((x < 0).sum()))
+            np.testing.assert_allclose(
+                np.asarray(v.vse(v.vmerge(m, ry, r))), np.where(x < 0, y, x))
+
+            # --- unpadded vl (tail handling) ---------------------------------
+            vl2 = n * n * 2 + 5
+            x2 = rng.normal(size=vl2)
+            r2 = v.vle(x2)
+            np.testing.assert_array_equal(np.asarray(v.vse(r2)), x2)
+            np.testing.assert_allclose(float(v.vredsum(r2)), x2.sum(), rtol=1e-12)
+            np.testing.assert_allclose(float(v.vredmax(r2)), x2.max())
+            e2 = np.asarray(v.vse(v.vexp(r2)))
+            np.testing.assert_allclose(e2, np.exp(x2), rtol=1e-12)
+
+    # --- paper kernels on the JAX machine vs numpy ---------------------------
+    v = make_machine(C, L, vlen_bits=65536, dtype=jnp.float64)
+    N = n * 8
+
+    A = rng.normal(size=(3, 4))
+    B = rng.normal(size=(4, N))
+    np.testing.assert_allclose(isa_kernels.fmatmul(v, A, B), A @ B, rtol=1e-10)
+
+    a, b = rng.normal(size=N), rng.normal(size=N)
+    np.testing.assert_allclose(float(isa_kernels.fdotproduct(v, a, b)),
+                               float(a @ b), rtol=1e-10)
+
+    M = rng.normal(size=(4, N))
+    got = isa_kernels.jacobi2d(v, M)
+    pad = np.pad(M, ((0, 0), (1, 1)))
+    want = 0.25 * (M[:-2] + M[2:] + pad[1:-1, :-2] + pad[1:-1, 2:])
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+    F = rng.normal(size=(3, 3))
+    Img = rng.normal(size=(5, N))
+    got = isa_kernels.fconv2d(v, Img, F)
+    want = np.zeros((3, N - 2))
+    for r_ in range(3):
+        for c_ in range(3):
+            want += F[r_, c_] * Img[r_:r_ + 3, c_:c_ + N - 2][:, :N - 2] * 0
+    # direct reference conv (valid mode)
+    from numpy.lib.stride_tricks import sliding_window_view
+    win = sliding_window_view(Img, (3, 3))
+    want = np.einsum("ijkl,kl->ij", win, F)
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+    S = rng.normal(size=(3, N))
+    got = isa_kernels.softmax(v, S)
+    e = np.exp(S - S.max(axis=1, keepdims=True))
+    np.testing.assert_allclose(got, e / e.sum(axis=1, keepdims=True), rtol=1e-10)
+
+    got = isa_kernels.vexp(v, a)
+    np.testing.assert_allclose(got, np.exp(a), rtol=1e-10)
+
+    print(f"check_core OK (C={C}, L={L}, n={n})")
+
+
+if __name__ == "__main__":
+    argv = [int(a) for a in sys.argv[1:]]
+    main(*argv)

@@ -1,0 +1,29 @@
+"""Run a repro.testing check module in a subprocess with N fake devices.
+
+The main pytest process must keep 1 device (mandated), so every multi-device
+correctness check runs as ``python -m repro.testing.<module>`` with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` in the child env.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+SRC = str(pathlib.Path(__file__).resolve().parents[2])
+
+
+def run_check(module: str, *args: str, devices: int = 8, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", module, *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multi-device check {module} {args} failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc.stdout

@@ -1,0 +1,157 @@
+"""AdamW with dtype-configurable state + fp32 master weights, built in-house.
+
+State dtypes matter at AraXL scale: a 398B-parameter hybrid on one pod is
+HBM-bound on optimizer state, so m/v can be kept in bf16 (stochastic-rounding
+-free, documented accuracy trade) while the master copy stays fp32.  All
+states inherit the parameter's sharding (ZeRO-3-equivalent: the same 2-D
+(fsdp, model) layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import PV
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    state_dtype: Any = jnp.float32      # m, v
+    master_fp32: bool = True            # keep fp32 master when params are low-p
+    math_dtype: Any = jnp.float32       # update arithmetic; bf16 for the
+    #                                     HBM-bound giants (XLA hoists f32
+    #                                     grad converts to whole-leaf buffers)
+
+
+def lr_schedule(cfg: OptConfig, step):
+    """Linear warmup -> cosine decay to 10%."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def opt_state_defs(param_defs, cfg: OptConfig):
+    """PV tree for the optimizer state (same logical axes as the params)."""
+    def per_param(pv: PV):
+        out = {"m": PV(pv.shape, cfg.state_dtype, pv.logical, "zeros"),
+               "v": PV(pv.shape, cfg.state_dtype, pv.logical, "zeros")}
+        if cfg.master_fp32 and pv.dtype != jnp.float32:
+            out["master"] = PV(pv.shape, jnp.float32, pv.logical, "zeros")
+        return out
+
+    tree = jax.tree.map(per_param, param_defs,
+                        is_leaf=lambda x: isinstance(x, PV))
+    return {"step": PV((), jnp.int32, (), "zeros"), "params": tree}
+
+
+def adamw_init(params, cfg: OptConfig):
+    def per_param(p):
+        out = {"m": jnp.zeros(p.shape, cfg.state_dtype),
+               "v": jnp.zeros(p.shape, cfg.state_dtype)}
+        if cfg.master_fp32 and p.dtype != jnp.float32:
+            out["master"] = p.astype(jnp.float32)
+        return out
+
+    return {"step": jnp.zeros((), jnp.int32),
+            "params": jax.tree.map(per_param, params)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)) \
+        if cfg.clip_norm else jnp.float32(1.0)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = lr.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["params"])
+
+    mdt = cfg.math_dtype
+
+    def upd_leaf(p, g, s, decay):
+        gf = g.astype(mdt) * scale.astype(mdt)
+        m = s["m"].astype(mdt) * jnp.asarray(cfg.b1, mdt) \
+            + gf * jnp.asarray(1 - cfg.b1, mdt)
+        v = s["v"].astype(mdt) * jnp.asarray(cfg.b2, mdt) \
+            + gf * gf * jnp.asarray(1 - cfg.b2, mdt)
+        upd = (m / b1c.astype(mdt)) / (jnp.sqrt(v / b2c.astype(mdt))
+                                       + jnp.asarray(cfg.eps, mdt))
+        master = s.get("master", p).astype(mdt)
+        master = master - lr.astype(mdt) * (upd + jnp.asarray(decay, mdt)
+                                            * master)
+        ns = {"m": m.astype(cfg.state_dtype), "v": v.astype(cfg.state_dtype)}
+        if "master" in s:
+            ns["master"] = master.astype(jnp.float32)
+        return master.astype(p.dtype), ns
+
+    def upd_stacked(p, g, s, decay):
+        """Layer-stacked leaf (e.g. 94 x 128-expert FFNs): update one layer
+        slice at a time inside a fori_loop whose carry aliases the donated
+        buffers — f32 temporaries are 1/L of the leaf, not GiBs live."""
+        has_master = "master" in s
+        L = p.shape[0]
+
+        def body(i, carry):
+            pc, mc, vc, mac = carry
+            sl = {"m": jax.lax.dynamic_index_in_dim(mc, i, keepdims=False),
+                  "v": jax.lax.dynamic_index_in_dim(vc, i, keepdims=False)}
+            if has_master:
+                sl["master"] = jax.lax.dynamic_index_in_dim(
+                    mac, i, keepdims=False)
+            np_, ns = upd_leaf(
+                jax.lax.dynamic_index_in_dim(pc, i, keepdims=False),
+                jax.lax.dynamic_index_in_dim(g, i, keepdims=False),
+                sl, decay)
+            pc = jax.lax.dynamic_update_index_in_dim(pc, np_, i, 0)
+            mc = jax.lax.dynamic_update_index_in_dim(mc, ns["m"], i, 0)
+            vc = jax.lax.dynamic_update_index_in_dim(vc, ns["v"], i, 0)
+            if has_master:
+                mac = jax.lax.dynamic_update_index_in_dim(
+                    mac, ns["master"], i, 0)
+            return pc, mc, vc, mac
+
+        init = (p, s["m"], s["v"], s["master"] if has_master else p)
+        pc, mc, vc, mac = jax.lax.fori_loop(0, L, body, init)
+        ns = {"m": mc, "v": vc}
+        if has_master:
+            ns["master"] = mac
+        return pc, ns
+
+    new_p, new_s = [], []
+    for p, g, s in zip(flat_p, flat_g, flat_s):
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        if p.ndim >= 3 and p.shape[0] >= 8:
+            np_, ns = upd_stacked(p, g, s, decay)
+        else:
+            np_, ns = upd_leaf(p, g, s, decay)
+        new_p.append(np_)
+        new_s.append(ns)
+
+    return (jax.tree.unflatten(treedef, new_p),
+            {"step": step, "params": jax.tree.unflatten(treedef, new_s)},
+            {"lr": lr, "grad_norm": gnorm})

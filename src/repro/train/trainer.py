@@ -1,0 +1,82 @@
+"""Train step assembly: microbatched grad accumulation + AdamW + metrics."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.parallel.sharding import ShardingRules
+from .optimizer import OptConfig, adamw_init, adamw_update, opt_state_defs
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+
+
+def train_state_defs(cfg: ModelConfig, opt_cfg: OptConfig):
+    pdefs = lm.model_defs(cfg)
+    return pdefs, opt_state_defs(pdefs, opt_cfg)
+
+
+def make_train_step(cfg: ModelConfig, rules: ShardingRules,
+                    opt_cfg: OptConfig, n_microbatches: int = 1,
+                    acc_dtype=jnp.float32):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: {"tokens": (B, S) int32, optional "ctx": (B, T, d_ctx)}.
+    Microbatches split the batch dim and accumulate grads (``acc_dtype``;
+    bf16 for the HBM-bound giants) in a sequential lax.scan — the standard
+    memory/compute trade at pod scale.
+    """
+
+    def loss_fn(params, tokens, ctx):
+        return lm.forward_train(params, tokens, cfg, rules, ctx)
+
+    def train_step(state: TrainState, batch):
+        tokens = batch["tokens"]
+        ctx = batch.get("ctx")
+        B = tokens.shape[0]
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, tokens,
+                                                      ctx)
+        else:
+            assert B % n_microbatches == 0
+            mb = B // n_microbatches
+            tok_mb = tokens.reshape(n_microbatches, mb, -1)
+            ctx_mb = (ctx.reshape(n_microbatches, mb, *ctx.shape[1:])
+                      if ctx is not None else None)
+
+            def acc_fn(carry, xs):
+                acc, loss_sum = carry
+                t = xs[0]
+                c = xs[1] if ctx is not None else None
+                l, g = jax.value_and_grad(loss_fn)(state.params, t, c)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype), acc, g)
+                return (acc, loss_sum + l), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), state.params)
+            xs = (tok_mb, ctx_mb) if ctx is not None else (tok_mb,)
+            (gacc, lsum), _ = jax.lax.scan(acc_fn, (zero, 0.0), xs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, gacc)
+            loss = lsum / n_microbatches
+
+        params, opt, metrics = adamw_update(state.params, grads, state.opt,
+                                            opt_cfg)
+        metrics["loss"] = loss
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: OptConfig, key) -> TrainState:
+    from repro.parallel.sharding import init_params
+    params = init_params(lm.model_defs(cfg), key)
+    return TrainState(params, adamw_init(params, opt_cfg))

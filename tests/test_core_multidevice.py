@@ -1,0 +1,13 @@
+"""Multi-device correctness of the AraXL core (ring, GLSU, ISA, kernels).
+
+Each test spawns a subprocess with 8 fake CPU devices (the main pytest
+process keeps 1 device, as mandated)."""
+import pytest
+
+from repro.testing.subproc import run_check
+
+
+@pytest.mark.parametrize("C,L", [(4, 2), (2, 4)])
+def test_core_isa_all_modes(C, L):
+    out = run_check("repro.testing.check_core", str(C), str(L), devices=8)
+    assert "check_core OK" in out

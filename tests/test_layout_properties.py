@@ -1,0 +1,49 @@
+"""Property tests (hypothesis) for the AraXL byte-mapping invariants.
+
+These are pure index-map properties (single device): the paper's layout
+equations must form a bijection memory <-> (row, cluster, lane), slides must
+compose, and the GLSU host oracle must invert itself.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (coords_to_element, element_to_coords,
+                               mem_to_striped_host, striped_to_mem_host)
+
+geom = st.sampled_from([(2, 2), (4, 2), (2, 4), (8, 4), (16, 4), (4, 16)])
+
+
+@given(geom, st.integers(0, 10_000))
+def test_byte_map_bijection(cl, i):
+    C, L = cl
+    b, c, l = element_to_coords(i, C, L)
+    assert 0 <= c < C and 0 <= l < L
+    assert coords_to_element(b, c, l, C, L) == i
+
+
+@given(geom, st.integers(1, 64))
+@settings(max_examples=40)
+def test_glsu_host_roundtrip(cl, rows):
+    C, L = cl
+    x = np.random.default_rng(0).normal(size=rows * C * L)
+    reg = mem_to_striped_host(x, C, L)
+    # paper map: element i sits at (i//(C*L), (i//L)%C, i%L)
+    for i in {0, 1, L - 1, L, C * L - 1, min(C * L, len(x) - 1), len(x) - 1}:
+        b, c, l = element_to_coords(i, C, L)
+        assert reg[b, c, l] == x[i]
+    np.testing.assert_array_equal(striped_to_mem_host(reg), x)
+
+
+@given(geom, st.integers(2, 32))
+@settings(max_examples=30)
+def test_consecutive_elements_are_ring_neighbours(cl, rows):
+    """The property RINGI relies on: elements i and i+1 sit either on the same
+    ring position (never, with striping) or on adjacent ring positions, where
+    ring position p = c*L + l — so slide-by-1 is a 1-hop exchange."""
+    C, L = cl
+    n = C * L
+    for i in range(min(rows * n - 1, 4 * n)):
+        _, c0, l0 = element_to_coords(i, C, L)
+        _, c1, l1 = element_to_coords(i + 1, C, L)
+        p0, p1 = c0 * L + l0, c1 * L + l1
+        assert (p1 - p0) % n == 1

@@ -1,0 +1,7 @@
+"""MoE EP (psum and a2a) vs local-dispatch oracle, on 8 fake devices."""
+from repro.testing.subproc import run_check
+
+
+def test_moe_ep_variants_match_oracle():
+    out = run_check("repro.testing.check_moe", "2", "4", devices=8)
+    assert "check_moe OK" in out

@@ -1,0 +1,7 @@
+"""Ring attention (sequence-parallel RINGI) correctness, in a subprocess."""
+from repro.testing.subproc import run_check
+
+
+def test_ring_attention_matches_reference():
+    out = run_check("repro.testing.check_ring_attention", "8", devices=8)
+    assert "check_ring_attention OK" in out

@@ -1,0 +1,69 @@
+"""Simulator engine unit tests + ISA/trace surface coherence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa_kernels
+from repro.core.isa import InstrRecord
+from repro.sim import TraceMachine, araxl_params, build_trace, simulate
+
+
+def test_isa_kernels_run_on_trace_machine():
+    """The six paper kernels are written once against the machine surface;
+    they must also run data-free on the TraceMachine (duck typing)."""
+    v = TraceMachine()
+    n = 64
+    A, B = np.zeros((2, 3)), np.zeros((3, 4 * n))
+    isa_kernels.fmatmul(v, A, B)
+    isa_kernels.fdotproduct(v, np.zeros(4 * n), np.zeros(4 * n))
+    isa_kernels.jacobi2d(v, np.zeros((4, 4 * n)))
+    isa_kernels.fconv2d(v, np.zeros((5, 4 * n)), np.zeros((3, 3)))
+    isa_kernels.vexp(v, np.zeros(4 * n))
+    isa_kernels.softmax(v, np.zeros((2, 4 * n)))
+    ops = {r.op for r in v.trace}
+    assert {"vfmacc.vf", "vfredsum", "vfredmax", "vfslide1down",
+            "vexp(poly)", "vle64.v", "vse64.v"} <= ops
+
+
+def test_single_instruction_timing():
+    p = araxl_params(64)
+    r = simulate([InstrRecord("vfadd", 6400, "fpu", 1.0,
+                              {"out": 1, "deps": ()})], p)
+    assert r.fpu_busy == 100          # ceil(6400/64)
+    assert r.cycles >= 100
+    assert r.flops == 6400
+
+
+def test_dependent_chain_streams():
+    """Chained dependent ops overlap (start offset = chain_lat), they do not
+    serialize at full duration."""
+    p = araxl_params(64)
+    recs = [InstrRecord("vfadd", 64 * 100, "fpu", 1.0, {"out": 1, "deps": ()}),
+            InstrRecord("vfmul", 64 * 100, "fpu", 1.0, {"out": 2, "deps": (1,)})]
+    r = simulate(recs, p)
+    assert r.cycles < 2 * 100 + 3 * p.chain_lat + 2 * p.issue_gap + 1
+
+
+def test_reduction_blocks_consumer():
+    """A reduction's scalar result is only available after the log-tree."""
+    p = araxl_params(64)
+    recs = [InstrRecord("vfredsum", 6400, "redu", 1.0, {"out": 1, "deps": ()}),
+            InstrRecord("vfadd", 6400, "fpu", 1.0, {"out": 2, "deps": (1,)})]
+    r = simulate(recs, p)
+    assert r.cycles >= 2 * 100 + p.red_tree_lat()
+
+
+@given(st.sampled_from(["fmatmul", "fconv2d", "jacobi2d", "fdotproduct",
+                        "exp", "softmax"]),
+       st.sampled_from([8, 16, 32, 64]),
+       st.sampled_from([64, 128, 256, 512]))
+@settings(max_examples=25, deadline=None)
+def test_utilization_bounded_and_monotone_properties(kernel, lanes, bpl):
+    """Invariants: 0 < util <= 1; adding interface latency never *helps*."""
+    p = araxl_params(lanes)
+    r = simulate(build_trace(kernel, p, bpl), p)
+    assert 0.0 < r.utilization <= 1.0
+    cut = p.with_cuts(glsu=4, reqi=1, ringi=1)
+    rc = simulate(build_trace(kernel, cut, bpl), cut)
+    assert rc.cycles >= r.cycles * 0.999
+    assert rc.flops == r.flops

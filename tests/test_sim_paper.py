@@ -1,0 +1,201 @@
+"""Validation of the cycle-approximate model against the paper's claims.
+
+This is the reproduction gate: every assertion cites the paper section it
+checks.  Residuals between the calibrated model and the paper are recorded
+in EXPERIMENTS.md §Sim-reproduction.
+"""
+import math
+
+import pytest
+
+from repro.sim import (ara2_params, araxl_params, build_trace, simulate)
+from repro.sim import paper, ppa
+from repro.sim.kernels import KERNEL_BUILDERS, max_perf_flop_per_cycle
+
+
+def util(kernel, params, bpl, **kw):
+    r = simulate(build_trace(kernel, params, bpl, **kw), params)
+    return r.utilization
+
+
+def fpc(kernel, params, bpl, **kw):
+    r = simulate(build_trace(kernel, params, bpl, **kw), params)
+    return r.flop_per_cycle
+
+
+def scale_vs_ara2_8(kernel, bpl):
+    a64 = fpc(kernel, araxl_params(64), bpl)
+    a8 = fpc(kernel, ara2_params(8), bpl)
+    return a64 / a8
+
+
+# ---------------------------------------------------------------------------
+# §IV-B — performance scalability (Fig. 6)
+# ---------------------------------------------------------------------------
+
+def test_fmatmul_64l_long_vector_utilization():
+    """'fmatmul ... up to 99% utilization' at 64 lanes, long vectors."""
+    assert util("fmatmul", araxl_params(64), 512) >= paper.FMATMUL_UTIL_64L_LONG
+
+
+def test_fconv2d_64l_long_vector_utilization():
+    assert util("fconv2d", araxl_params(64), 512) >= paper.FCONV2D_UTIL_64L_LONG
+
+
+@pytest.mark.parametrize("kernel", ["fmatmul", "fconv2d", "jacobi2d", "exp"])
+def test_compute_bound_kernels_scale_linearly(kernel):
+    """'linear performance scaling from 8 to 64 lanes' for the
+    compute-bound kernels in the long-vector regime."""
+    for lanes in (16, 32, 64):
+        s = fpc(kernel, araxl_params(lanes), 512) / \
+            fpc(kernel, araxl_params(8), 512)
+        assert s == pytest.approx(lanes / 8, rel=0.06), (kernel, lanes, s)
+
+
+def test_softmax_scaling_factor():
+    """'softmax ... performance scaling factor of 7.3x on a 64-lane AraXL'."""
+    s = scale_vs_ara2_8("softmax", 512)
+    assert s == pytest.approx(paper.SOFTMAX_SCALE_64L, rel=0.05), s
+
+
+def test_fdotproduct_scaling_factor():
+    """'... and 6.1x' for the memory-bound fdotproduct."""
+    s = scale_vs_ara2_8("fdotproduct", 512)
+    assert s == pytest.approx(paper.FDOT_SCALE_64L, rel=0.06), s
+
+
+def test_fdotproduct_long_vector_mitigation():
+    """'close-to-linear performance scaling of 7.6x with a 16384 B/lane dot
+    product, stripmined over 16 loop iterations' — longer vectors amortize
+    the inter-lane/inter-cluster reduction stages."""
+    p = araxl_params(64)
+    tr = build_trace("fdotproduct", p, 16384)
+    n_strips = sum(1 for r in tr if r.op.startswith("vfredsum"))
+    assert n_strips == 16                     # the paper's 16 iterations
+    s = scale_vs_ara2_8("fdotproduct", 16384)
+    assert s >= paper.FDOT_SCALE_64L_16KIB - 0.3
+    # and it must clearly beat the 512 B/lane operating point
+    assert s > scale_vs_ara2_8("fdotproduct", 512) + 1.0
+
+
+def test_reduction_latency_is_size_independent():
+    """The mechanism behind the softmax/fdot gap: tree latency depends on the
+    configuration, not the problem size."""
+    p = araxl_params(64)
+    assert p.red_tree_lat() == araxl_params(64).red_tree_lat()
+    assert araxl_params(64).red_tree_lat() > araxl_params(8).red_tree_lat()
+
+
+def test_medium_vectors_lose_utilization():
+    """§IV-B: 'in the medium vector length regime (64 B/lane) ... lower FPU
+    utilization', and AraXL-64 is hit at least as hard as Ara2-8."""
+    for kernel in KERNEL_BUILDERS:
+        u_med = util(kernel, araxl_params(64), 64)
+        u_long = util(kernel, araxl_params(64), 512)
+        assert u_med < u_long, kernel
+
+
+# ---------------------------------------------------------------------------
+# §IV-C — latency tolerance (Fig. 7)
+# ---------------------------------------------------------------------------
+
+def _drop(kernel, bpl, **cuts):
+    p0 = araxl_params(64)
+    p1 = p0.with_cuts(**cuts)
+    return util(kernel, p0, bpl) - util(kernel, p1, bpl)
+
+
+def test_glsu_cut_tolerance():
+    """+4 GLSU registers (+8 cycles): 'maximum utilization drop in the
+    long-vector regime is a mere 1.5%' (we allow 2.5% model band); 'longer
+    vectors face virtually no performance drop'."""
+    for kernel in KERNEL_BUILDERS:
+        assert _drop(kernel, 128, glsu=4) <= 0.025, kernel
+        assert _drop(kernel, 512, glsu=4) <= 0.011, kernel
+
+
+def test_reqi_cut_tolerance():
+    """+1 REQI register (+2 cycles/ack): a visible drop for fconv2d at
+    128 B/lane (paper: 5%), 'completely amortized at 512 B/lane'."""
+    d128 = _drop("fconv2d", 128, reqi=1)
+    assert 0.01 <= d128 <= 0.09, d128
+    assert _drop("fconv2d", 512, reqi=1) <= 0.005
+    assert _drop("jacobi2d", 512, reqi=1) <= 0.005
+
+
+def test_ringi_cut_tolerance():
+    """+1 RINGI register (+1 cycle/hop): 'up to 1.4% drop' for long vectors
+    (slide/reduction kernels; 2.2% model band at 512 B/lane)."""
+    for kernel in KERNEL_BUILDERS:
+        assert _drop(kernel, 512, ringi=1) <= 0.022, kernel
+
+
+def test_overall_latency_tolerance_long_vectors():
+    """'less than 2% utilization drop in the long-vector regime' across all
+    three interfaces for the compute-bound kernels."""
+    for kernel in ("fmatmul", "fconv2d", "jacobi2d", "exp", "softmax"):
+        for cuts in (dict(glsu=4), dict(reqi=1), dict(ringi=1)):
+            assert _drop(kernel, 512, **cuts) <= paper.OVERALL_LONG_VECTOR_DROP, \
+                (kernel, cuts)
+
+
+# ---------------------------------------------------------------------------
+# §IV-D — PPA (Tables II/III)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lanes", [16, 32, 64])
+def test_area_model_vs_table_ii(lanes):
+    got = ppa.area_breakdown_kge(araxl_params(lanes))
+    want = paper.TABLE_II_KGE[lanes]
+    assert got["total"] == pytest.approx(want["total"], rel=0.03)
+    assert got["clusters"] == pytest.approx(want["clusters"], rel=0.01)
+    assert got["glsu"] == pytest.approx(want["glsu"], rel=0.11)
+
+
+def test_area_scales_linearly():
+    """'2x the area with twice the lanes' — the headline scaling claim."""
+    a16 = ppa.area_breakdown_kge(araxl_params(16))["total"]
+    a32 = ppa.area_breakdown_kge(araxl_params(32))["total"]
+    a64 = ppa.area_breakdown_kge(araxl_params(64))["total"]
+    assert a32 / a16 == pytest.approx(1.93, abs=0.1)
+    assert a64 / a32 == pytest.approx(1.97, abs=0.1)
+    # 'only 3.8x the area of a 16-lane instance' (abstract)
+    assert a64 / a16 == pytest.approx(3.8, abs=0.15)
+
+
+@pytest.mark.parametrize("lanes", [16, 32, 64])
+def test_interfaces_are_cheap(lanes):
+    """'The GLSU, RINGI, and REQI account for only 3% of the total area.'"""
+    assert ppa.interface_area_fraction(araxl_params(lanes)) <= 0.035
+
+
+@pytest.mark.parametrize("lanes", [16, 32, 64])
+def test_table_iii_ppa(lanes):
+    freq, perf, eeff, aeff = paper.TABLE_III[lanes]
+    p = araxl_params(lanes)
+    assert p.freq_ghz == pytest.approx(freq)
+    u = util("fmatmul", p, 512)
+    assert ppa.peak_gflops(p, u) == pytest.approx(perf, rel=0.035)
+    assert ppa.energy_eff_gflops_per_w(p, u) == pytest.approx(eeff, rel=0.04)
+    assert ppa.area_eff_gflops_per_mm2(p, u) == pytest.approx(aeff, rel=0.05)
+
+
+def test_abstract_headline():
+    """146 GFLOPs peak, 40.1 GFLOPs/W, 1.15 GHz for the 64-lane instance."""
+    p = araxl_params(64)
+    u = util("fmatmul", p, 512)
+    assert ppa.peak_gflops(p, u) >= 145.0
+    assert ppa.energy_eff_gflops_per_w(p, u) == pytest.approx(40.1, rel=0.04)
+
+
+# ---------------------------------------------------------------------------
+# Model-internal sanity
+# ---------------------------------------------------------------------------
+
+def test_flops_never_exceed_table_i_peak():
+    for kernel in KERNEL_BUILDERS:
+        for lanes in (8, 64):
+            p = araxl_params(lanes)
+            r = simulate(build_trace(kernel, p, 512), p)
+            assert r.flop_per_cycle <= max_perf_flop_per_cycle(kernel, lanes) * 1.001, \
+                (kernel, lanes, r.flop_per_cycle)

@@ -1,0 +1,36 @@
+"""End-to-end behaviour of the paper's system (core machine on 1 device).
+
+The full multi-device behaviour is covered by the subprocess checks
+(test_core_multidevice / test_ring_attention / test_moe_multidevice); this
+exercises the degenerate 1x1 machine so the public API contract holds on
+any device count.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa_kernels, make_machine
+from repro.sim import TraceMachine, araxl_params, simulate
+
+
+def test_single_lane_machine_end_to_end():
+    v = make_machine(1, 1, vlen_bits=8192, dtype=jnp.float32)
+    x = np.arange(64, dtype=np.float32)
+    r = v.vle(x)
+    np.testing.assert_allclose(np.asarray(v.vse(r)), x)
+    np.testing.assert_allclose(float(v.vredsum(r)), x.sum())
+    got = np.asarray(v.vse(v.vslide1down(r, fill=0.0)))
+    np.testing.assert_allclose(got, np.concatenate([x[1:], [0.0]]))
+    S = np.random.default_rng(0).normal(size=(2, 64))
+    sm = isa_kernels.softmax(v, S)
+    np.testing.assert_allclose(np.asarray(sm).sum(-1), 1.0, rtol=1e-5)
+
+
+def test_isa_to_sim_pipeline():
+    """The same kernel source drives both execution and the cycle model."""
+    tv = TraceMachine()
+    isa_kernels.fmatmul(tv, np.zeros((4, 8)), np.zeros((8, 64 * 16)))
+    p = araxl_params(64)
+    res = simulate(tv.trace, p)
+    assert res.cycles > 0
+    assert 0 < res.utilization <= 1.0
+    assert res.flops == 2 * 4 * 8 * 64 * 16      # 2 FLOP per FMA element
