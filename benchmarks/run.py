@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   tab3   PPA (peak GFLOPs / energy / area efficiency)
   kern   Pallas kernels (interpret) vs jnp oracle wall time
   ring   AraXL core collectives correctness+wall time (8 fake devices)
+  coll   flat vs two-level vs XLA-native collectives head-to-head
+         (reduce / allgather / reduce-scatter / staged GLSU, 8 fake devices,
+         both C·L factorizations — the §III-B.4 hierarchy ablation)
   roof   roofline summary per dry-run cell (requires results/dryrun/*.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
@@ -139,6 +142,16 @@ def bench_ring():
     print(f"ring/core_suite_8dev,{us:.0f},all-modes-allclose")
 
 
+def bench_collectives():
+    from repro.testing.subproc import run_check
+    for C, L in ((4, 2), (2, 4)):
+        out = run_check("repro.testing.check_collectives", str(C), str(L),
+                        devices=8)
+        for line in out.splitlines():
+            if line.startswith("coll/"):
+                print(line)
+
+
 def bench_roofline():
     outdir = pathlib.Path(__file__).resolve().parents[1] / "results/dryrun"
     cells = sorted(outdir.glob("*.json")) if outdir.exists() else []
@@ -161,7 +174,7 @@ def bench_roofline():
 SECTIONS = {
     "fig6": bench_fig6, "fig7": bench_fig7, "tab1": bench_tab1,
     "tab2": bench_tab2, "tab3": bench_tab3, "kern": bench_kernels,
-    "ring": bench_ring, "roof": bench_roofline,
+    "ring": bench_ring, "coll": bench_collectives, "roof": bench_roofline,
 }
 
 

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 CI entry point (offline; no pip installs — missing extras like
+# `hypothesis` are shimmed by tests/conftest.py).
+#
+# The main pytest process runs with 8 fake CPU devices; the multi-device
+# correctness checks additionally spawn their own 8-device subprocesses.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -21,6 +21,13 @@ which is a transpose-flavoured all-to-all.  Two implementations:
     ``ppermute`` (a pipelined shift register chain in hardware, a short-range
     ICI hop on TPU).  This is exactly the Align/Shuffle decomposition.
 
+    With ``hierarchy="two-level"`` the Align stage is split along the paper's
+    hierarchy: the low log2(L) rounds are *cluster-local* lane rotations (the
+    short-hop shift registers of §III-B.3), and only the remaining log2(C)
+    rounds — plus a per-lane carry for buckets that wrapped past the cluster
+    boundary — ride the inter-cluster ring.  Same round count, but the
+    physically long wires never carry intra-cluster traffic.
+
 ``mode="direct"`` — one XLA resharding (reshape + sharding constraint): the
     flat all-to-all AraXL argues *against* in hardware; on TPU the XLA
     all-to-all is the baseline the staged version is compared with in §Perf.
@@ -40,8 +47,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import substrate
 from .layout import VectorLayout, VectorMachineSpec
-from .ring import ppermute_shift, ring_pos
+from .ring import _check_hierarchy, ppermute_shift, ring_pos
 
 
 # ---------------------------------------------------------------------------
@@ -82,15 +90,76 @@ def _route_buckets(buf: jax.Array, axis_names: Sequence[str], n: int) -> jax.Arr
     return buf
 
 
+def _route_buckets_two_level(buf: jax.Array, cluster_axes: Sequence[str],
+                             C: int, lane_axes: Sequence[str], L: int
+                             ) -> jax.Array:
+    """Two-level Align: route bucket o exactly o flattened-ring positions
+    forward using log2(L) cluster-local lane rotations followed by log2(C)
+    inter-cluster ring rotations.
+
+    A bucket with offset o lands on lane (l + o) mod L of cluster
+    c + o//L + carry, where carry = 1 iff the lane rotation wrapped past the
+    cluster boundary (detectable at the *destination* lane l' as
+    l' < o mod L).  Same post-condition as the flat schedule: slot o on
+    device d holds the bucket that originated at device (d - o) mod n.
+    """
+    n = C * L
+    assert C & (C - 1) == 0 and L & (L - 1) == 0, \
+        "two-level staged GLSU requires power-of-2 cluster and lane counts"
+    o = jnp.arange(n)
+    bshape = (n,) + (1,) * (buf.ndim - 1)
+
+    # Align short-hops: intra-cluster lane rotation by o mod L.
+    o_lane = o % L
+    k = 0
+    while (1 << k) < L:
+        step = 1 << k
+        moved = ppermute_shift(buf, lane_axes, -step, L)
+        take = ((o_lane >> k) & 1).astype(bool)
+        buf = jnp.where(take.reshape(bshape), moved, buf)
+        k += 1
+
+    # Inter-cluster rounds: o//L hops, +1 for buckets whose lane rotation
+    # wrapped (their current lane l' satisfies l' < o mod L).
+    lane_here = ring_pos(lane_axes)
+    carry = (lane_here < o_lane).astype(o.dtype)
+    hops = (o // L + carry) % C
+    k = 0
+    while (1 << k) < C:
+        step = 1 << k
+        moved = ppermute_shift(buf, cluster_axes, -step, C)
+        take = ((hops >> k) & 1).astype(bool)
+        buf = jnp.where(take.reshape(bshape), moved, buf)
+        k += 1
+    return buf
+
+
 def n_staged_rounds(n: int) -> int:
-    return max(1, int(math.log2(n)))
+    """Rounds the staged Align network runs for an n-position ring.
+
+    log2(n) power-of-2 shift rounds; a 1-lane machine routes nothing (the
+    ``_route_buckets`` loop body never executes), so n=1 is 0 rounds."""
+    if n <= 1:
+        return 0
+    return int(math.log2(n))
 
 
 # ---------------------------------------------------------------------------
 # mem -> reg (vector load through the GLSU)
 # ---------------------------------------------------------------------------
 
-def _mem_to_reg_local(xloc: jax.Array, axis_names: Sequence[str], n: int) -> jax.Array:
+def _make_router(spec: VectorMachineSpec, hierarchy: str):
+    """The Align-stage routing schedule for ``spec`` (flat or two-level)."""
+    _check_hierarchy(hierarchy)
+    if hierarchy == "two-level":
+        return lambda buf: _route_buckets_two_level(
+            buf, spec.cluster_axes, spec.n_clusters,
+            spec.lane_axes, spec.n_lanes)
+    return lambda buf: _route_buckets(buf, spec.ring_axes, spec.n_total_lanes)
+
+
+def _mem_to_reg_local(xloc: jax.Array, axis_names: Sequence[str], n: int,
+                      route) -> jax.Array:
     """Local body: (B,) memory shard -> (B, 1, 1)-flattened striped column."""
     B = xloc.shape[0]
     assert B % n == 0, f"staged GLSU needs B % n == 0 (B={B}, n={n})"
@@ -105,7 +174,7 @@ def _mem_to_reg_local(xloc: jax.Array, axis_names: Sequence[str], n: int) -> jax
     order = jnp.argsort((d_of_j - p) % n * B + j)      # group by o, then t
     buckets = xloc[order].reshape(n, m)
     # --- Align: power-of-2 shift rounds
-    routed = _route_buckets(buckets, axis_names, n)
+    routed = route(buckets)
     # --- assembly: on device d, slot o originated at q=(d-o) mod n and fills
     # rows [q*m, (q+1)*m). Order slots by source id and concatenate.
     dpos = ring_pos(axis_names)
@@ -115,7 +184,8 @@ def _mem_to_reg_local(xloc: jax.Array, axis_names: Sequence[str], n: int) -> jax
     return col.reshape(B, 1, 1)
 
 
-def mem_to_reg(spec: VectorMachineSpec, x: jax.Array, mode: str = "staged") -> jax.Array:
+def mem_to_reg(spec: VectorMachineSpec, x: jax.Array, mode: str = "staged",
+               hierarchy: str = "flat") -> jax.Array:
     """Vector load: 1-D memory-layout array (length B*n, blocked-sharded over
     the ring) -> (B, C, L) striped register."""
     n = spec.n_total_lanes
@@ -128,10 +198,11 @@ def mem_to_reg(spec: VectorMachineSpec, x: jax.Array, mode: str = "staged") -> j
         return jax.lax.with_sharding_constraint(reg, spec.reg_sharding())
 
     axes = spec.ring_axes
-    fn = lambda xloc: _mem_to_reg_local(xloc.reshape(-1), axes, n)
-    out = jax.shard_map(fn, mesh=spec.mesh,
-                        in_specs=(spec.mem_spec(),),
-                        out_specs=spec.reg_spec())(x)
+    route = _make_router(spec, hierarchy)
+    fn = lambda xloc: _mem_to_reg_local(xloc.reshape(-1), axes, n, route)
+    out = substrate.shard_map(fn, mesh=spec.mesh,
+                              in_specs=(spec.mem_spec(),),
+                              out_specs=spec.reg_spec())(x)
     return out
 
 
@@ -139,7 +210,8 @@ def mem_to_reg(spec: VectorMachineSpec, x: jax.Array, mode: str = "staged") -> j
 # reg -> mem (vector store through the GLSU)
 # ---------------------------------------------------------------------------
 
-def _reg_to_mem_local(col: jax.Array, axis_names: Sequence[str], n: int) -> jax.Array:
+def _reg_to_mem_local(col: jax.Array, axis_names: Sequence[str], n: int,
+                      route) -> jax.Array:
     B = col.shape[0]
     assert B % n == 0
     m = B // n
@@ -150,7 +222,7 @@ def _reg_to_mem_local(col: jax.Array, axis_names: Sequence[str], n: int) -> jax.
     q_of_b = b // m
     order = jnp.argsort(((q_of_b - d) % n) * B + b)    # group by o, then row
     buckets = col[order].reshape(n, m)
-    routed = _route_buckets(buckets, axis_names, n)
+    routed = route(buckets)
     # assembly on memory device q: slot o came from source dsrc=(q-o) mod n,
     # carrying elements with local j = t*n + dsrc.
     qpos = ring_pos(axis_names)
@@ -162,7 +234,8 @@ def _reg_to_mem_local(col: jax.Array, axis_names: Sequence[str], n: int) -> jax.
     return out
 
 
-def reg_to_mem(spec: VectorMachineSpec, reg: jax.Array, mode: str = "staged") -> jax.Array:
+def reg_to_mem(spec: VectorMachineSpec, reg: jax.Array, mode: str = "staged",
+               hierarchy: str = "flat") -> jax.Array:
     n = spec.n_total_lanes
     B = reg.shape[0]
     if mode == "direct":
@@ -171,8 +244,9 @@ def reg_to_mem(spec: VectorMachineSpec, reg: jax.Array, mode: str = "staged") ->
             x, NamedSharding(spec.mesh, spec.mem_spec()))
 
     axes = spec.ring_axes
-    fn = lambda c: _reg_to_mem_local(c.reshape(-1), axes, n)
-    out = jax.shard_map(fn, mesh=spec.mesh,
-                        in_specs=(spec.reg_spec(),),
-                        out_specs=spec.mem_spec())(reg)
+    route = _make_router(spec, hierarchy)
+    fn = lambda c: _reg_to_mem_local(c.reshape(-1), axes, n, route)
+    out = substrate.shard_map(fn, mesh=spec.mesh,
+                              in_specs=(spec.reg_spec(),),
+                              out_specs=spec.mem_spec())(reg)
     return out

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import substrate
 from . import glsu, ring
 from .layout import (VReg, VectorLayout, VectorMachineSpec, global_index_grid,
                      valid_mask)
@@ -47,7 +48,10 @@ class AraXLMachine:
     """JAX executor for the vector ISA on a hierarchical mesh.
 
     ``glsu_mode`` / ``reduce_mode`` select paper-faithful staged/ring
-    implementations vs flat XLA collectives (the §Perf ablation switch).
+    implementations vs flat XLA collectives (the §Perf ablation switch);
+    ``hierarchy`` ("flat" | "two-level") picks the flattened lane ring or the
+    paper's intra-cluster/inter-cluster two-level interconnect for both the
+    staged GLSU Align network and the RINGI reductions.
     """
 
     #: ops counted with >1 flop/element (paper Table I: exp is a 7-term
@@ -55,11 +59,12 @@ class AraXLMachine:
     _EXP_FLOPS = 28.0
 
     def __init__(self, spec: VectorMachineSpec, *, glsu_mode: str = "staged",
-                 reduce_mode: str = "ring", dtype=jnp.float32,
-                 trace: Optional[list] = None):
+                 reduce_mode: str = "ring", hierarchy: str = "flat",
+                 dtype=jnp.float32, trace: Optional[list] = None):
         self.spec = spec
         self.glsu_mode = glsu_mode
         self.reduce_mode = reduce_mode
+        self.hierarchy = hierarchy
         self.dtype = dtype
         self.trace = trace
 
@@ -86,12 +91,13 @@ class AraXLMachine:
             x = jnp.pad(x, (0, pvl - x.shape[0]))
         x = jax.lax.with_sharding_constraint(
             x, NamedSharding(self.spec.mesh, self.spec.mem_spec()))
-        data = glsu.mem_to_reg(self.spec, x, self.glsu_mode)
+        data = glsu.mem_to_reg(self.spec, x, self.glsu_mode, self.hierarchy)
         self._rec("vle64.v", vl, "vlsu")
         return VReg(data, vl)
 
     def vse(self, r: VReg) -> jax.Array:
-        out = glsu.reg_to_mem(self.spec, r.data, self.glsu_mode)
+        out = glsu.reg_to_mem(self.spec, r.data, self.glsu_mode,
+                              self.hierarchy)
         self._rec("vse64.v", r.vl, "vlsu")
         return out[: r.vl]
 
@@ -203,8 +209,8 @@ class AraXLMachine:
             out = ring.slidedown_local(col, axes, n, k, 0.0)
             return out.reshape(-1, 1, 1)
 
-        out = jax.shard_map(fn, mesh=self.spec.mesh, in_specs=(reg,),
-                            out_specs=reg)(a.data)
+        out = substrate.shard_map(fn, mesh=self.spec.mesh, in_specs=(reg,),
+                                  out_specs=reg)(a.data)
         self._rec("vslidedown.vx", a.vl, "sldu", meta={"hops": k % n})
         return VReg(out, a.vl)
 
@@ -212,7 +218,7 @@ class AraXLMachine:
     def vredsum(self, a: VReg) -> jax.Array:
         masked = jnp.where(valid_mask(self.spec, a), a.data, 0)
         out = ring.reduce_scalar(self.spec, masked.astype(self.dtype), "sum",
-                                 self.reduce_mode)
+                                 self.reduce_mode, self.hierarchy)
         self._rec("vfredsum", a.vl, "redu", 1.0)
         return out
 
@@ -220,7 +226,7 @@ class AraXLMachine:
         neg = jnp.asarray(-jnp.inf, self.dtype)
         masked = jnp.where(valid_mask(self.spec, a), a.data, neg)
         out = ring.reduce_scalar(self.spec, masked.astype(self.dtype), "max",
-                                 self.reduce_mode)
+                                 self.reduce_mode, self.hierarchy)
         self._rec("vfredmax", a.vl, "redu", 1.0)
         return out
 

@@ -80,6 +80,16 @@ class VectorMachineSpec:
         return self.vlen_bits // self.sew_bits
 
     @property
+    def cluster_axes(self) -> tuple[str, ...]:
+        """The inter-cluster ring axes (hierarchy level 2) as a tuple."""
+        return _axis_tuple(self.cluster_axis)
+
+    @property
+    def lane_axes(self) -> tuple[str, ...]:
+        """The intra-cluster lane axes (hierarchy level 1) as a tuple."""
+        return _axis_tuple(self.lane_axis)
+
+    @property
     def ring_axes(self) -> tuple[str, ...]:
         """Flattened (cluster-major, lane-minor) ring over every lane.
 

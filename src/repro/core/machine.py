@@ -17,10 +17,11 @@ def make_vector_mesh(n_clusters: int, n_lanes: int,
 
 def make_machine(n_clusters: int, n_lanes: int, *, vlen_bits: int = 65536,
                  sew_bits: int = 64, glsu_mode: str = "staged",
-                 reduce_mode: str = "ring", dtype=None,
-                 trace: list | None = None) -> AraXLMachine:
+                 reduce_mode: str = "ring", hierarchy: str = "flat",
+                 dtype=None, trace: list | None = None) -> AraXLMachine:
     import jax.numpy as jnp
     mesh = make_vector_mesh(n_clusters, n_lanes)
     spec = VectorMachineSpec(mesh, "cluster", "lane", vlen_bits, sew_bits)
     return AraXLMachine(spec, glsu_mode=glsu_mode, reduce_mode=reduce_mode,
-                        dtype=dtype or jnp.float32, trace=trace)
+                        hierarchy=hierarchy, dtype=dtype or jnp.float32,
+                        trace=trace)

@@ -3,23 +3,34 @@
 AraXL joins adjacent vector clusters with a ring carrying 64 bit/cycle per
 direction, because the dominant permutation patterns of HPC/ML long-vector
 code are slide-by-1 (stencils, shifted products) and reductions — both
-neighbour-only.  On TPU the ICI torus makes ``jax.lax.ppermute`` (a physical
+neighbour-only.  On TPU the ICI torus makes ``ppermute`` (a physical
 neighbour hop when the permutation is a ring shift) the exact analogue.
 
-Everything here is written with ``jax.shard_map`` over the *flattened ring* of
-all lanes (cluster-major, lane-minor — the same order as the element striping),
-so a slide-by-1 of the architectural vector is one neighbour ppermute plus a
-purely local fix-up, and a full reduction is the paper's 4-stage pipeline:
+Two interconnect models coexist, selected by ``hierarchy=``:
+
+``"flat"``       the flattened ring of all n = C·L lanes (cluster-major,
+                 lane-minor — the same order as the element striping): every
+                 collective is log2(n) or n-1 hops on one ring.
+
+``"two-level"``  the paper's hierarchy (§III-B.4): collectives run first over
+                 the *lane* axis inside each cluster (log2(L) short hops on
+                 the intra-cluster interconnect), then over the *cluster*
+                 axis on the inter-cluster ring (log2(C) hops).  This is the
+                 structure AraXL argues makes the design physically scalable:
+                 the long wires only ever carry the per-cluster stage.
+
+Either way a full reduction is the paper's 4-stage pipeline:
 
     SIMD/intra-lane  : local ``jnp`` reduce of the lane's VRF rows
-    inter-lane       : log2(L) ppermute hops inside the cluster
-    inter-cluster    : log2(C) ppermute hops on the ring ("log-tree fashion,
+    inter-lane       : log2(L) hops inside the cluster
+    inter-cluster    : log2(C) hops on the ring ("log-tree fashion,
                        utilises multiple hops for later stages" — §III-B.4)
     broadcast        : free (recursive doubling leaves the total everywhere)
 
-The functions take ``axis_names`` = the flattened ring axes and run inside an
-enclosing ``shard_map``; the ``*_op`` wrappers at the bottom build the full
-shard_map'd callable for a :class:`~repro.core.layout.VectorMachineSpec`.
+The ``*_local`` functions take axis names and run inside an enclosing
+``shard_map`` (resolved portably via :mod:`repro.substrate`); the wrappers at
+the bottom build the full shard_map'd callable for a
+:class:`~repro.core.layout.VectorMachineSpec`.
 """
 from __future__ import annotations
 
@@ -30,7 +41,22 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import substrate
 from .layout import VectorLayout, VectorMachineSpec
+
+HIERARCHIES = ("flat", "two-level")
+MODES = ("ring", "xla")
+
+
+def _check_hierarchy(hierarchy: str) -> None:
+    if hierarchy not in HIERARCHIES:
+        raise ValueError(f"hierarchy must be one of {HIERARCHIES}, "
+                         f"got {hierarchy!r}")
+
+
+def _check_mode(mode: str) -> None:
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -38,11 +64,12 @@ from .layout import VectorLayout, VectorMachineSpec
 # ---------------------------------------------------------------------------
 
 def ring_size(axis_names: Sequence[str]) -> int:
-    return jax.lax.axis_size(tuple(axis_names))
+    """Ring size derived from the mesh axes (portable: no jax.lax.axis_size)."""
+    return substrate.axis_size(tuple(axis_names))
 
 
 def ring_pos(axis_names: Sequence[str]) -> jax.Array:
-    return jax.lax.axis_index(tuple(axis_names))
+    return substrate.axis_index(tuple(axis_names))
 
 
 def _shift_perm(n: int, shift: int) -> list[tuple[int, int]]:
@@ -54,7 +81,7 @@ def _shift_perm(n: int, shift: int) -> list[tuple[int, int]]:
 def ppermute_shift(x: jax.Array, axis_names: Sequence[str], shift: int,
                    n: int) -> jax.Array:
     """Receive the block of the device ``shift`` positions ahead on the ring."""
-    return jax.lax.ppermute(x, tuple(axis_names), perm=_shift_perm(n, shift))
+    return substrate.ppermute(x, tuple(axis_names), _shift_perm(n, shift))
 
 
 # -- slides ------------------------------------------------------------------
@@ -136,24 +163,42 @@ def ring_allreduce_local(x: jax.Array, axis_names: Sequence[str], n: int,
     return total
 
 
+def _reduce_fns(op: str):
+    if op == "sum":
+        return functools.partial(jnp.sum, axis=0), jnp.add
+    if op == "max":
+        return functools.partial(jnp.max, axis=0), jnp.maximum
+    if op == "min":
+        return functools.partial(jnp.min, axis=0), jnp.minimum
+    raise ValueError(f"unsupported reduction {op}")
+
+
 def reduce_to_scalar_local(col: jax.Array, axis_names: Sequence[str], n: int,
                            op: str = "sum") -> jax.Array:
-    """The paper's full 4-stage reduction for one vreg column.
+    """The paper's full 4-stage reduction for one vreg column, on the
+    flattened ring.
 
     op in {sum, max, min}. Returns the reduction replicated on every lane
     (cluster-0/lane-0 would forward it to the scalar core via REQI)."""
-    if op == "sum":
-        local = jnp.sum(col, axis=0)
-        comb = jnp.add
-    elif op == "max":
-        local = jnp.max(col, axis=0)
-        comb = jnp.maximum
-    elif op == "min":
-        local = jnp.min(col, axis=0)
-        comb = jnp.minimum
-    else:  # pragma: no cover - guarded by callers
-        raise ValueError(f"unsupported reduction {op}")
-    return ring_allreduce_local(local, axis_names, n, comb)
+    local_red, comb = _reduce_fns(op)
+    return ring_allreduce_local(local_red(col), axis_names, n, comb)
+
+
+def reduce_to_scalar_local_two_level(col: jax.Array,
+                                     cluster_axes: Sequence[str], C: int,
+                                     lane_axes: Sequence[str], L: int,
+                                     op: str = "sum") -> jax.Array:
+    """§III-B.4 hierarchical reduction: intra-lane, then log2(L) hops on the
+    intra-cluster interconnect, then log2(C) hops on the inter-cluster ring.
+
+    Same result as the flat reduction, but no stage ever spans more than one
+    hierarchy level — the wires that scale with C never see the lane traffic.
+    """
+    local_red, comb = _reduce_fns(op)
+    total = local_red(col)
+    total = ring_allreduce_local(total, lane_axes, L, comb)      # inter-lane
+    total = ring_allreduce_local(total, cluster_axes, C, comb)   # inter-cluster
+    return total
 
 
 # -- ring all-gather / reduce-scatter (GLSU staging + FSDP overlap) -----------
@@ -178,6 +223,18 @@ def ring_allgather_local(x: jax.Array, axis_names: Sequence[str], n: int) -> jax
     return stacked.reshape((n * x.shape[0],) + x.shape[1:])
 
 
+def ring_allgather_local_two_level(x: jax.Array,
+                                   cluster_axes: Sequence[str], C: int,
+                                   lane_axes: Sequence[str], L: int) -> jax.Array:
+    """Hierarchical all-gather: L-1 intra-cluster hops assemble the cluster's
+    lane blocks (lane-minor order), then C-1 inter-cluster ring hops exchange
+    whole cluster blocks (cluster-major order) — together exactly the
+    flattened ring order p = c*L + l, with only cluster-sized payloads on the
+    long wires."""
+    intra = ring_allgather_local(x, lane_axes, L)
+    return ring_allgather_local(intra, cluster_axes, C)
+
+
 def ring_reduce_scatter_local(x: jax.Array, axis_names: Sequence[str], n: int) -> jax.Array:
     """(n-1)-step ring reduce-scatter along axis 0: ring position p ends up
     with ``sum_over_devices(x)[p-th chunk]``, each step one neighbour hop."""
@@ -195,13 +252,27 @@ def ring_reduce_scatter_local(x: jax.Array, axis_names: Sequence[str], n: int) -
     return acc                                        # fully-summed chunk p
 
 
+def ring_reduce_scatter_local_two_level(x: jax.Array,
+                                        cluster_axes: Sequence[str], C: int,
+                                        lane_axes: Sequence[str], L: int
+                                        ) -> jax.Array:
+    """Hierarchical reduce-scatter: first C-1 inter-cluster hops reduce-scatter
+    the C superchunks across the cluster ring (device (c, l) keeps superchunk
+    c, partially summed over clusters at fixed lane l), then L-1 intra-cluster
+    hops finish the sum and scatter the superchunk over the lanes.  Device
+    (c, l) ends with chunk p = c*L + l of the total — identical placement to
+    the flat schedule."""
+    part = ring_reduce_scatter_local(x, cluster_axes, C)
+    return ring_reduce_scatter_local(part, lane_axes, L)
+
+
 # ---------------------------------------------------------------------------
 # Whole-register ops for a VectorMachineSpec (shard_map wrappers).
 # ---------------------------------------------------------------------------
 
 def _striped_shard_map(spec: VectorMachineSpec, fn, n_out: int = 1):
     reg = spec.reg_spec(VectorLayout.STRIPED)
-    return jax.shard_map(
+    return substrate.shard_map(
         fn, mesh=spec.mesh,
         in_specs=(reg,),
         out_specs=reg if n_out == 1 else tuple(reg for _ in range(n_out)),
@@ -236,10 +307,13 @@ def slide1up(spec: VectorMachineSpec, data: jax.Array, fill: float = 0.0) -> jax
 
 
 def reduce_scalar(spec: VectorMachineSpec, data: jax.Array, op: str = "sum",
-                  mode: str = "ring") -> jax.Array:
+                  mode: str = "ring", hierarchy: str = "flat") -> jax.Array:
     """Full-register reduction. mode='ring' is the paper-faithful log-tree on
     neighbour hops; mode='xla' lets XLA pick (flat all-reduce) — the §Perf
-    comparison point."""
+    comparison point.  With mode='ring', ``hierarchy`` selects the flattened
+    ring or the paper's two-level intra-cluster/inter-cluster pipeline."""
+    _check_mode(mode)
+    _check_hierarchy(hierarchy)
     axes, n = spec.ring_axes, spec.n_total_lanes
     reg = spec.reg_spec(VectorLayout.STRIPED)
 
@@ -249,8 +323,78 @@ def reduce_scalar(spec: VectorMachineSpec, data: jax.Array, op: str = "sum",
 
     def fn(x):
         col = _local_col(x)
-        return reduce_to_scalar_local(col, axes, n, op).reshape(1, 1, 1)
+        if hierarchy == "two-level":
+            r = reduce_to_scalar_local_two_level(
+                col, spec.cluster_axes, spec.n_clusters,
+                spec.lane_axes, spec.n_lanes, op)
+        else:
+            r = reduce_to_scalar_local(col, axes, n, op)
+        return r.reshape(1, 1, 1)
 
-    out = jax.shard_map(fn, mesh=spec.mesh, in_specs=(reg,),
-                        out_specs=P(None, spec.cluster_axis, spec.lane_axis))(data)
+    out = substrate.shard_map(fn, mesh=spec.mesh, in_specs=(reg,),
+                              out_specs=P(None, spec.cluster_axis,
+                                          spec.lane_axis))(data)
     return out.reshape(-1)[0]
+
+
+def ring_allgather(spec: VectorMachineSpec, data: jax.Array,
+                   mode: str = "ring", hierarchy: str = "flat") -> jax.Array:
+    """All-gather over the lane ring.
+
+    ``data`` is (n_total, B): row p is ring position p's shard (sharded
+    ``P(ring_axes, None)``).  Returns (n_total, n_total*B): every row the
+    full ring-order concatenation (replicated along the ring).  mode='xla'
+    is the XLA-native all-gather baseline."""
+    _check_mode(mode)
+    _check_hierarchy(hierarchy)
+    axes, n = spec.ring_axes, spec.n_total_lanes
+    assert data.ndim == 2 and data.shape[0] == n, data.shape
+    in_spec = P(axes, None)
+
+    def fn(x):                                        # x (1, B)
+        col = x[0]
+        if mode == "xla":
+            full = substrate.all_gather(col, axes, axis=0, tiled=True)
+        elif hierarchy == "two-level":
+            full = ring_allgather_local_two_level(
+                col, spec.cluster_axes, spec.n_clusters,
+                spec.lane_axes, spec.n_lanes)
+        else:
+            full = ring_allgather_local(col, axes, n)
+        return full[None]
+
+    return substrate.shard_map(fn, mesh=spec.mesh, in_specs=(in_spec,),
+                               out_specs=in_spec)(data)
+
+
+def ring_reduce_scatter(spec: VectorMachineSpec, data: jax.Array,
+                        mode: str = "ring", hierarchy: str = "flat"
+                        ) -> jax.Array:
+    """Reduce-scatter over the lane ring.
+
+    ``data`` is (n_total, M) with M % n_total == 0: row p is ring position
+    p's full-length contribution.  Returns (n_total, M // n_total): row p =
+    chunk p of the elementwise sum of all rows.  mode='xla' is the XLA-native
+    reduce-scatter baseline."""
+    _check_mode(mode)
+    _check_hierarchy(hierarchy)
+    axes, n = spec.ring_axes, spec.n_total_lanes
+    assert data.ndim == 2 and data.shape[0] == n, data.shape
+    assert data.shape[1] % n == 0, data.shape
+    in_spec = P(axes, None)
+
+    def fn(x):                                        # x (1, M)
+        col = x[0]
+        if mode == "xla":
+            out = substrate.psum_scatter(col, axes, scatter_dimension=0,
+                                         tiled=True)
+        elif hierarchy == "two-level":
+            out = ring_reduce_scatter_local_two_level(
+                col, spec.cluster_axes, spec.n_clusters,
+                spec.lane_axes, spec.n_lanes)
+        else:
+            out = ring_reduce_scatter_local(col, axes, n)
+        return out[None]
+
+    return substrate.shard_map(fn, mesh=spec.mesh, in_specs=(in_spec,),
+                               out_specs=in_spec)(data)

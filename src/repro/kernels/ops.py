@@ -98,6 +98,21 @@ def dotprod(a, b, *, use_pallas=None, block=2048):
     return _red.dotprod(a, b, block=block, interpret=(m == "interpret"))
 
 
+def dotprod_hier(a, b, *, C, L, hierarchy="two-level", use_pallas=None,
+                 block=256):
+    """fdotproduct through the machine-level log-tree: per-lane Pallas
+    partials combined intra-cluster then inter-cluster (or over the
+    flattened ring with hierarchy="flat")."""
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.dotprod(a, b)
+    quantum = C * L * 8 * block
+    a, _ = _pad_to(a, quantum, 0)
+    b, _ = _pad_to(b, quantum, 0)
+    return _red.dotprod_hier(a, b, C=C, L=L, block=block, hierarchy=hierarchy,
+                             interpret=(m == "interpret"))
+
+
 def expv(x, *, use_pallas=None, block=2048):
     m = _mode(use_pallas)
     if m == "ref":

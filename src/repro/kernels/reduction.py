@@ -8,6 +8,11 @@
   (2^k * P(r), degree-6 — the 28-FLOP/element budget of Table I).
 * ``softmax_rows`` is a one-pass online-softmax over W blocks per row —
   vfredmax / vexp / vfredsum / vfdiv fused into one VMEM-resident sweep.
+* ``combine_partials`` / ``dotprod_hier`` lift the in-kernel intra-lane stage
+  to the full machine: per-lane Pallas partials combined in the RINGI
+  log-tree order, either over the flattened ring (``hierarchy="flat"``) or
+  the paper's two-level intra-cluster -> inter-cluster pipeline
+  (``hierarchy="two-level"``, §III-B.4).
 """
 from __future__ import annotations
 
@@ -124,6 +129,63 @@ def _softmax_kernel(x_ref, o_ref, m_ref, d_ref):
     o_ref[...] = (e / d).astype(o_ref.dtype)
     m_ref[...] = m
     d_ref[...] = d
+
+
+# ---------------------------------------------------------------------------
+# hierarchical partial combine (the machine-level log-tree, host/XLA side)
+# ---------------------------------------------------------------------------
+
+def _pairwise_tree(v: jax.Array, op) -> jax.Array:
+    """Binary-tree reduce along axis 0 in the fixed pairing order of the
+    recursive-doubling hardware stages (odd stragglers fold in next round)."""
+    while v.shape[0] > 1:
+        if v.shape[0] % 2:
+            tail, v = v[-1:], v[:-1]
+            v = op(v[0::2], v[1::2])
+            v = jnp.concatenate([v, tail], axis=0)
+        else:
+            v = op(v[0::2], v[1::2])
+    return v[0]
+
+
+def combine_partials(partials: jax.Array, C: int, L: int,
+                     hierarchy: str = "two-level", op=jnp.add) -> jax.Array:
+    """Combine the (C*L, ...) per-lane partials in the RINGI log-tree order.
+
+    ``hierarchy="two-level"``: log2(L) intra-cluster stages then log2(C)
+    inter-cluster stages, exactly the paper's reduction schedule;
+    ``hierarchy="flat"``: one log2(C*L) tree over the flattened ring.  Both
+    return the same value for exact ops; for floats they fix the two
+    summation orders the §Perf ablation compares.
+    """
+    p = jnp.asarray(partials)
+    n = C * L
+    assert p.shape[0] == n, (p.shape, C, L)
+    if hierarchy == "two-level":
+        per_cluster = p.reshape((C, L) + p.shape[1:])
+        intra = jax.vmap(lambda row: _pairwise_tree(row, op))(per_cluster)
+        return _pairwise_tree(intra, op)
+    if hierarchy == "flat":
+        return _pairwise_tree(p, op)
+    raise ValueError(f"unknown hierarchy {hierarchy!r}")
+
+
+def dotprod_hier(a: jax.Array, b: jax.Array, *, C: int, L: int,
+                 block: int = 2048, hierarchy: str = "two-level",
+                 interpret: bool = False) -> jax.Array:
+    """fdotproduct as the paper's full 4-stage pipeline: each of the C*L
+    lanes runs the Pallas ``dotprod`` kernel over its contiguous slice
+    (SIMD/intra-lane stage), and the scalar partials ride the
+    inter-lane/inter-cluster log-tree via :func:`combine_partials`."""
+    (N,) = a.shape
+    n = C * L
+    assert N % n == 0, (N, n)
+    parts = jnp.stack([
+        dotprod(a[i * (N // n):(i + 1) * (N // n)],
+                b[i * (N // n):(i + 1) * (N // n)],
+                block=block, interpret=interpret)
+        for i in range(n)])
+    return combine_partials(parts, C, L, hierarchy)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))

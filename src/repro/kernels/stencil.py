@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.substrate import halo_block_spec
+
 
 # ---------------------------------------------------------------------------
 # jacobi2d: out[i,j] = 0.25*(in[i-1,j] + in[i+1,j] + in[i,j-1] + in[i,j+1])
@@ -40,9 +42,9 @@ def jacobi2d(x_padded: jax.Array, *, bh: int = 8, bw: int = 256,
     return pl.pallas_call(
         _jacobi_kernel,
         grid=(H // bh, W // bw),
-        # overlapping halo blocks: element-offset indexing (pl.Element dims).
-        in_specs=[pl.BlockSpec((pl.Element(bh + 2), pl.Element(bw + 2)),
-                               lambda i, j: (i * bh, j * bw))],
+        # overlapping halo blocks: element-offset indexing (portable spec).
+        in_specs=[halo_block_spec((bh + 2, bw + 2),
+                                  lambda i, j: (i * bh, j * bw))],
         out_specs=pl.BlockSpec((bh, bw), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((H, W), x_padded.dtype),
         interpret=interpret,
@@ -77,8 +79,8 @@ def fconv2d(x_padded: jax.Array, filt: jax.Array, *, fr: int = 7, fc: int = 7,
         kernel,
         grid=(H // bh, W // bw),
         in_specs=[
-            pl.BlockSpec((pl.Element(bh + fr - 1), pl.Element(bw + fc - 1)),
-                         lambda i, j: (i * bh, j * bw)),
+            halo_block_spec((bh + fr - 1, bw + fc - 1),
+                            lambda i, j: (i * bh, j * bw)),
             pl.BlockSpec((fr, fc), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bh, bw), lambda i, j: (i, j)),

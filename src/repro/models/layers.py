@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import substrate
 from repro.configs.base import ATTN, MAMBA, MLP, MOE, XATTN, ModelConfig
 from repro.parallel.sharding import PV, ShardingRules, constraint
 
@@ -235,7 +236,7 @@ def attn_layer_decode(p, x, cache: AttnCache, pos, cfg: ModelConfig,
 
         bq = rules.spec(("batch", "", "", "", ""))
         bk = rules.spec(("batch", "", "", ""))
-        o, ck, cv = jax.shard_map(
+        o, ck, cv = substrate.shard_map(
             body, mesh=mesh,
             in_specs=(bq, cspec, cspec, bk, bk, P()),
             out_specs=(bq, cspec, cspec))(
@@ -454,7 +455,7 @@ def moe_layer(p, x, cfg: ModelConfig, rules: ShardingRules):
             y = run_local(xn_, ti_, tg_, wi, wg, wo, 0, E)
             return jax.lax.psum(y, "model")
 
-        y = jax.shard_map(
+        y = substrate.shard_map(
             body, mesh=mesh,
             in_specs=(bspec, bspec, bspec,
                       P(None, None, "model"), P(None, None, "model"),
@@ -478,7 +479,7 @@ def moe_layer(p, x, cfg: ModelConfig, rules: ShardingRules):
         y = run_local(xn_, ti_loc, tg_, wi, wg, wo, 0, E_loc)
         return jax.lax.psum(y, "model")
 
-    y = jax.shard_map(
+    y = substrate.shard_map(
         body, mesh=mesh,
         in_specs=(bspec, bspec, bspec,
                   P("model", None, None), P("model", None, None),
@@ -545,7 +546,7 @@ def _moe_ep_a2a(p, xn, top_idx, top_gate, cfg: ModelConfig,
         out = jnp.zeros((N, d), jnp.float32).at[tok].add(w * picked)
         return out.reshape(B_loc, S_loc, d)
 
-    y = jax.shard_map(
+    y = substrate.shard_map(
         body, mesh=mesh,
         in_specs=(bspec_tok, bspec_idx, bspec_idx,
                   P("model", None, None), P("model", None, None),

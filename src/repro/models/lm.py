@@ -24,6 +24,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import substrate
 from repro.configs.base import ATTN, MAMBA, MLP, MOE, XATTN, ModelConfig
 from repro.parallel.sharding import PV, ShardingRules, constraint
 from . import layers as L
@@ -206,9 +207,9 @@ def embed_tokens(params, tokens, cfg: ModelConfig, rules: ShardingRules):
         x = jnp.where(ok[..., None], x, 0)
         return jax.lax.psum(x, "model")
 
-    x = jax.shard_map(body, mesh=mesh,
-                      in_specs=(bspec, P("model", None)),
-                      out_specs=bspec)(tokens, params["embed"])
+    x = substrate.shard_map(body, mesh=mesh,
+                            in_specs=(bspec, P("model", None)),
+                            out_specs=bspec)(tokens, params["embed"])
     return constraint(x, rules, "batch", "act_seq", None)
 
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import substrate
 from repro.core.ring import ppermute_shift
 
 
@@ -80,6 +81,6 @@ def ring_attention(q, k, v, mesh: Mesh, *, axis: str = "data",
         return out.astype(q_loc.dtype)
 
     spec_q = P(None, axis, None, None)
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=(spec_q, spec_q, spec_q),
-                         out_specs=spec_q)(q, k, v)
+    return substrate.shard_map(body, mesh=mesh,
+                               in_specs=(spec_q, spec_q, spec_q),
+                               out_specs=spec_q)(q, k, v)

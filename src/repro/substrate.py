@@ -1,0 +1,141 @@
+"""Version-portable collectives substrate.
+
+JAX has moved/renamed its SPMD surface across minor releases: ``shard_map``
+graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``, and
+``jax.lax.axis_size`` only exists on recent versions.  Every repro module
+resolves the primitives from here instead of guessing, so the whole codebase
+tracks one compatibility point.
+
+The exported surface is the subset the AraXL reproduction actually uses:
+
+* :func:`shard_map`   — the per-device SPMD mapper (wherever it lives)
+* :func:`axis_size`   — static size of one or more mesh axes, usable inside
+  a ``shard_map`` body (derived via the ``psum(1, axes)`` identity, which
+  constant-folds to a Python int on every supported version)
+* :func:`axis_index`  — flattened (row-major) device index over mesh axes
+* :func:`ppermute`    — neighbour permutation (the RINGI hop)
+* :func:`all_gather` / :func:`psum_scatter` — the XLA-native comparison
+  points for the §Perf flat-vs-hierarchical ablations
+* :func:`mesh_axis_size` — axis size read off a concrete ``Mesh`` (outside
+  any traced context)
+* :func:`halo_block_spec` — an element-offset (overlapping halo) Pallas
+  ``BlockSpec``, portable across the ``pl.Element`` and
+  ``indexing_mode=pl.Unblocked`` spellings
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+Axis = str | Sequence[str]
+
+
+def _axis_tuple(axis_names: Axis) -> tuple[str, ...]:
+    if isinstance(axis_names, str):
+        return (axis_names,)
+    return tuple(axis_names)
+
+
+def _resolve_shard_map() -> Callable:
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    try:
+        from jax.experimental.shard_map import shard_map as fn  # type: ignore
+        return fn
+    except ImportError as e:  # pragma: no cover - one of the two must exist
+        raise ImportError(
+            "neither jax.shard_map nor jax.experimental.shard_map is "
+            f"available in jax {jax.__version__}") from e
+
+
+_SHARD_MAP = _resolve_shard_map()
+
+
+def shard_map(f: Callable, *, mesh: Mesh, in_specs, out_specs, **kwargs):
+    """``shard_map`` resolved from wherever this jax version keeps it.
+
+    Same calling convention as the modern ``jax.shard_map`` for the argument
+    subset this repo uses (``mesh``/``in_specs``/``out_specs`` keywords).
+    """
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def axis_size(axis_names: Axis) -> int:
+    """Size of (the product of) mesh axes, inside a ``shard_map`` body.
+
+    ``jax.lax.axis_size`` where it exists; otherwise the portable
+    ``psum(1, axes)`` identity, which resolves to a static Python int
+    because the reduced value is a non-traced constant.
+    """
+    names = _axis_tuple(axis_names)
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(names)
+    return jax.lax.psum(1, names)
+
+
+def axis_index(axis_names: Axis) -> jax.Array:
+    """Flattened row-major index over ``axis_names`` (first axis major).
+
+    Built from single-axis ``jax.lax.axis_index`` calls so it works on
+    versions where the tuple form is missing.
+    """
+    names = _axis_tuple(axis_names)
+    idx = jax.lax.axis_index(names[0])
+    for a in names[1:]:
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def ppermute(x: jax.Array, axis_names: Axis,
+             perm: Sequence[tuple[int, int]]) -> jax.Array:
+    """Source->dest permutation over the flattened ``axis_names`` ring."""
+    return jax.lax.ppermute(x, _axis_tuple(axis_names), perm=perm)
+
+
+def psum(x, axis_names: Axis):
+    return jax.lax.psum(x, _axis_tuple(axis_names))
+
+
+def pmax(x, axis_names: Axis):
+    return jax.lax.pmax(x, _axis_tuple(axis_names))
+
+
+def all_gather(x: jax.Array, axis_names: Axis, *, axis: int = 0,
+               tiled: bool = True) -> jax.Array:
+    """XLA-native all-gather (the flat baseline the RINGI version races)."""
+    return jax.lax.all_gather(x, _axis_tuple(axis_names), axis=axis,
+                              tiled=tiled)
+
+
+def psum_scatter(x: jax.Array, axis_names: Axis, *, scatter_dimension: int = 0,
+                 tiled: bool = True) -> jax.Array:
+    """XLA-native reduce-scatter comparison point."""
+    return jax.lax.psum_scatter(x, _axis_tuple(axis_names),
+                                scatter_dimension=scatter_dimension,
+                                tiled=tiled)
+
+
+def mesh_axis_size(mesh: Mesh, axis_names: Axis) -> int:
+    """Static axis size read off a concrete mesh (outside traced code)."""
+    return math.prod(mesh.shape[a] for a in _axis_tuple(axis_names))
+
+
+def halo_block_spec(block_shape: Sequence[int], index_map: Callable):
+    """Pallas ``BlockSpec`` whose ``index_map`` returns *element* offsets.
+
+    Overlapping halo windows (stencil reads) need element-granular block
+    placement.  Recent jax spells this ``pl.Element`` per dimension; older
+    versions use ``indexing_mode=pl.Unblocked()``.  Resolve whichever exists.
+    """
+    from jax.experimental import pallas as pl
+    element = getattr(pl, "Element", None)
+    if element is not None:
+        return pl.BlockSpec(tuple(element(b) for b in block_shape), index_map)
+    return pl.BlockSpec(tuple(block_shape), index_map,
+                        indexing_mode=pl.Unblocked())

@@ -1,0 +1,128 @@
+"""Oracle checks + timings for flat vs two-level vs XLA-native collectives.
+
+Runs under 8 fake CPU devices for a (C, L) factorization of the lane ring
+(both 4x2 and 2x4 in CI).  Every variant is checked against a pure-numpy
+host oracle (the ``mem_to_reg_host`` discipline); integer payloads must match
+*bit for bit* across hierarchies (addition is exact, so any schedule
+discrepancy is a routing bug, not roundoff), float64 payloads to 1e-12.
+
+Also emits ``coll/...`` CSV timing rows consumed by ``benchmarks/run.py``.
+
+Usage: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+       python -m repro.testing.check_collectives [C] [L]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time_us(fn, *args, reps: int = 10) -> float:
+    """Compiled-execution microseconds (jit once, then time steady-state)."""
+    jfn = jax.jit(fn)
+    jax.block_until_ready(jfn(*args))          # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(jfn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(C: int = 4, L: int = 2) -> None:
+    from repro.core import glsu, ring
+    from repro.core.glsu import mem_to_reg_host, n_staged_rounds
+    from repro.core.layout import VectorMachineSpec
+    from repro.core.machine import make_vector_mesh
+
+    n = C * L
+    assert len(jax.devices()) >= n, "need more fake devices"
+    spec = VectorMachineSpec(make_vector_mesh(C, L))
+    rng = np.random.default_rng(0)
+    tag = f"C{C}L{L}"
+
+    # --- staged-network cost model coherence ------------------------------
+    assert n_staged_rounds(1) == 0              # 1-lane machine routes nothing
+    assert n_staged_rounds(n) == int(np.log2(n))
+
+    # --- reduce_scalar ----------------------------------------------------
+    B = 4 * n
+    xf = rng.normal(size=(B, C, L))
+    xi = rng.integers(-1_000, 1_000, size=(B, C, L))
+    jf, ji = jnp.asarray(xf), jnp.asarray(xi, jnp.int64)
+    variants = [("flat", dict(mode="ring", hierarchy="flat")),
+                ("two-level", dict(mode="ring", hierarchy="two-level")),
+                ("xla", dict(mode="xla"))]
+    int_results = {}
+    for name, kw in variants:
+        got = ring.reduce_scalar(spec, jf, "sum", **kw)
+        np.testing.assert_allclose(float(got), xf.sum(), rtol=1e-12,
+                                   err_msg=f"reduce_scalar/{name}")
+        int_results[name] = int(ring.reduce_scalar(spec, ji, "sum", **kw))
+        for op, ref in (("max", xf.max()), ("min", xf.min())):
+            np.testing.assert_array_equal(
+                float(ring.reduce_scalar(spec, jf, op, **kw)), ref,
+                err_msg=f"reduce_scalar/{op}/{name}")
+        us = _time_us(lambda d, kw=kw: ring.reduce_scalar(spec, d, "sum",
+                                                          **kw), jf)
+        print(f"coll/reduce/{tag}/{name},{us:.0f},ok")
+    assert len(set(int_results.values())) == 1, int_results   # bit-for-sum
+    assert int_results["flat"] == int(xi.sum())
+
+    # --- ring_allgather ---------------------------------------------------
+    shard = rng.normal(size=(n, 6))
+    js = jnp.asarray(shard)
+    want_ag = np.tile(shard.reshape(-1), (n, 1))
+    for name, kw in variants:
+        got = np.asarray(ring.ring_allgather(spec, js, **kw))
+        np.testing.assert_array_equal(got, want_ag,
+                                      err_msg=f"ring_allgather/{name}")
+        us = _time_us(lambda d, kw=kw: ring.ring_allgather(spec, d, **kw), js)
+        print(f"coll/allgather/{tag}/{name},{us:.0f},ok")
+
+    # --- ring_reduce_scatter ---------------------------------------------
+    m = 3
+    contrib_f = rng.normal(size=(n, n * m))
+    contrib_i = rng.integers(-1_000, 1_000, size=(n, n * m))
+    want_rs_f = contrib_f.sum(axis=0).reshape(n, m)
+    want_rs_i = contrib_i.sum(axis=0).reshape(n, m)
+    jcf = jnp.asarray(contrib_f)
+    jci = jnp.asarray(contrib_i, jnp.int64)
+    for name, kw in variants:
+        got = np.asarray(ring.ring_reduce_scatter(spec, jcf, **kw))
+        np.testing.assert_allclose(got, want_rs_f, rtol=1e-12,
+                                   err_msg=f"ring_reduce_scatter/{name}")
+        np.testing.assert_array_equal(
+            np.asarray(ring.ring_reduce_scatter(spec, jci, **kw)), want_rs_i,
+            err_msg=f"ring_reduce_scatter/int/{name}")   # bit-for-sum
+        us = _time_us(lambda d, kw=kw: ring.ring_reduce_scatter(spec, d,
+                                                                **kw), jcf)
+        print(f"coll/reduce_scatter/{tag}/{name},{us:.0f},ok")
+
+    # --- staged GLSU: two-level Align == flat Align == host byte map ------
+    vl = n * n * 3
+    x = rng.normal(size=vl)
+    jx = jnp.asarray(x)
+    want_reg = mem_to_reg_host(x, C, L)
+    for hierarchy in ("flat", "two-level"):
+        reg = glsu.mem_to_reg(spec, jx, "staged", hierarchy)
+        np.testing.assert_array_equal(np.asarray(reg), want_reg,
+                                      err_msg=f"mem_to_reg/{hierarchy}")
+        back = glsu.reg_to_mem(spec, reg, "staged", hierarchy)
+        np.testing.assert_array_equal(np.asarray(back), x,
+                                      err_msg=f"reg_to_mem/{hierarchy}")
+        us = _time_us(lambda d, h=hierarchy: glsu.mem_to_reg(spec, d,
+                                                             "staged", h), jx)
+        print(f"coll/glsu_load/{tag}/{hierarchy},{us:.0f},ok")
+
+    print(f"check_collectives OK (C={C}, L={L}, n={n})")
+
+
+if __name__ == "__main__":
+    argv = [int(a) for a in sys.argv[1:]]
+    main(*argv)

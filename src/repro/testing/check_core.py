@@ -23,54 +23,57 @@ def main(C: int = 4, L: int = 2) -> None:
     n = C * L
     rng = np.random.default_rng(0)
 
-    for glsu_mode in ("staged", "direct"):
-        for reduce_mode in ("ring", "xla"):
-            v = make_machine(C, L, vlen_bits=4096, glsu_mode=glsu_mode,
-                             reduce_mode=reduce_mode, dtype=jnp.float64)
+    configs = [(g, r, "flat") for g in ("staged", "direct")
+               for r in ("ring", "xla")]
+    configs.append(("staged", "ring", "two-level"))   # §III-B.4 hierarchy
+    for glsu_mode, reduce_mode, hierarchy in configs:
+        v = make_machine(C, L, vlen_bits=4096, glsu_mode=glsu_mode,
+                         reduce_mode=reduce_mode, hierarchy=hierarchy,
+                         dtype=jnp.float64)
 
-            # --- GLSU round trip + exact byte map --------------------------
-            vl = n * n * 3
-            x = rng.normal(size=vl)
-            r = v.vle(x)
-            np.testing.assert_array_equal(np.asarray(r.data),
-                                          mem_to_striped_host(x, C, L))
-            np.testing.assert_array_equal(np.asarray(v.vse(r)), x)
+        # --- GLSU round trip + exact byte map --------------------------
+        vl = n * n * 3
+        x = rng.normal(size=vl)
+        r = v.vle(x)
+        np.testing.assert_array_equal(np.asarray(r.data),
+                                      mem_to_striped_host(x, C, L))
+        np.testing.assert_array_equal(np.asarray(v.vse(r)), x)
 
-            # --- slides -----------------------------------------------------
-            s = np.asarray(v.vse(v.vslide1down(r, fill=-7.0)))
-            exp = np.concatenate([x[1:], [-7.0]])
-            np.testing.assert_allclose(s, exp)
-            s = np.asarray(v.vse(v.vslide1up(r, fill=-3.0)))
-            np.testing.assert_allclose(s, np.concatenate([[-3.0], x[:-1]]))
-            for k in (1, 2, n - 1, n, n + 3, 2 * n):
-                s = np.asarray(v.vse(v.vslidedown(r, k)))
-                exp = np.concatenate([x[k:], np.zeros(k)])
-                np.testing.assert_allclose(
-                    s, exp, err_msg=f"slidedown k={k} {glsu_mode}/{reduce_mode}")
-
-            # --- reductions --------------------------------------------------
-            np.testing.assert_allclose(float(v.vredsum(r)), x.sum(), rtol=1e-12)
-            np.testing.assert_allclose(float(v.vredmax(r)), x.max(), rtol=0)
-
-            # --- elementwise + masks ----------------------------------------
-            y = rng.normal(size=vl)
-            ry = v.vle(y)
-            np.testing.assert_allclose(np.asarray(v.vse(v.vfma(r, ry, ry))),
-                                       x * y + y, rtol=1e-12)
-            m = v.vmslt(r, 0.0)
-            np.testing.assert_array_equal(int(v.vcpop(m)), int((x < 0).sum()))
+        # --- slides -----------------------------------------------------
+        s = np.asarray(v.vse(v.vslide1down(r, fill=-7.0)))
+        exp = np.concatenate([x[1:], [-7.0]])
+        np.testing.assert_allclose(s, exp)
+        s = np.asarray(v.vse(v.vslide1up(r, fill=-3.0)))
+        np.testing.assert_allclose(s, np.concatenate([[-3.0], x[:-1]]))
+        for k in (1, 2, n - 1, n, n + 3, 2 * n):
+            s = np.asarray(v.vse(v.vslidedown(r, k)))
+            exp = np.concatenate([x[k:], np.zeros(k)])
             np.testing.assert_allclose(
-                np.asarray(v.vse(v.vmerge(m, ry, r))), np.where(x < 0, y, x))
+                s, exp, err_msg=f"slidedown k={k} {glsu_mode}/{reduce_mode}")
 
-            # --- unpadded vl (tail handling) ---------------------------------
-            vl2 = n * n * 2 + 5
-            x2 = rng.normal(size=vl2)
-            r2 = v.vle(x2)
-            np.testing.assert_array_equal(np.asarray(v.vse(r2)), x2)
-            np.testing.assert_allclose(float(v.vredsum(r2)), x2.sum(), rtol=1e-12)
-            np.testing.assert_allclose(float(v.vredmax(r2)), x2.max())
-            e2 = np.asarray(v.vse(v.vexp(r2)))
-            np.testing.assert_allclose(e2, np.exp(x2), rtol=1e-12)
+        # --- reductions --------------------------------------------------
+        np.testing.assert_allclose(float(v.vredsum(r)), x.sum(), rtol=1e-12)
+        np.testing.assert_allclose(float(v.vredmax(r)), x.max(), rtol=0)
+
+        # --- elementwise + masks ----------------------------------------
+        y = rng.normal(size=vl)
+        ry = v.vle(y)
+        np.testing.assert_allclose(np.asarray(v.vse(v.vfma(r, ry, ry))),
+                                   x * y + y, rtol=1e-12)
+        m = v.vmslt(r, 0.0)
+        np.testing.assert_array_equal(int(v.vcpop(m)), int((x < 0).sum()))
+        np.testing.assert_allclose(
+            np.asarray(v.vse(v.vmerge(m, ry, r))), np.where(x < 0, y, x))
+
+        # --- unpadded vl (tail handling) ---------------------------------
+        vl2 = n * n * 2 + 5
+        x2 = rng.normal(size=vl2)
+        r2 = v.vle(x2)
+        np.testing.assert_array_equal(np.asarray(v.vse(r2)), x2)
+        np.testing.assert_allclose(float(v.vredsum(r2)), x2.sum(), rtol=1e-12)
+        np.testing.assert_allclose(float(v.vredmax(r2)), x2.max())
+        e2 = np.asarray(v.vse(v.vexp(r2)))
+        np.testing.assert_allclose(e2, np.exp(x2), rtol=1e-12)
 
     # --- paper kernels on the JAX machine vs numpy ---------------------------
     v = make_machine(C, L, vlen_bits=65536, dtype=jnp.float64)

@@ -1,0 +1,118 @@
+"""Deterministic stand-in for the tiny slice of `hypothesis` this repo uses.
+
+The CI environment is offline and cannot ``pip install hypothesis``; rather
+than losing the four property-test modules, :func:`install` registers this
+module's ``given`` / ``settings`` / ``strategies`` under the ``hypothesis``
+name in ``sys.modules`` **only when the real package is missing** (see
+``tests/conftest.py``).  With the real package present, nothing happens.
+
+Differences from real hypothesis — all deliberate for an offline CI:
+
+* examples are drawn from a seeded PRNG keyed on the test name, so every run
+  exercises the identical case list (no flaky shrink phases, no database);
+* ``max_examples`` is honoured (default 10);
+* only the strategies the test-suite uses exist: ``integers``,
+  ``sampled_from``, ``booleans``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Sequence
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class SearchStrategy:
+    """A deterministic value source: ``draw(rng)`` yields one example."""
+
+    def __init__(self, draw, label: str):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"SearchStrategy({self.label})"
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                          f"integers({min_value}, {max_value})")
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    els = list(elements)
+    if not els:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda rng: els[rng.randrange(len(els))],
+                          f"sampled_from(<{len(els)} elements>)")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+class settings:
+    """Decorator recording ``max_examples`` for a later ``@given``."""
+
+    def __init__(self, max_examples: int | None = None, deadline=None, **_):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._compat_settings = self
+        return fn
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    """Run the test over a deterministic, seeded example sweep."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # resolved at call time so @settings works above OR below @given
+            # (wraps copied a below-@given marker; an above-@given settings
+            # decorates the wrapper itself)
+            cfg = getattr(wrapper, "_compat_settings", None)
+            n_examples = (cfg.max_examples if cfg and cfg.max_examples
+                          else DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            for _ in range(n_examples):
+                pos = tuple(s.draw(rng) for s in arg_strategies)
+                kws = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *pos, **kwargs, **kws)
+
+        # pytest must not mistake the strategy parameters for fixtures.
+        wrapper.__signature__ = inspect.Signature()
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return decorate
+
+
+def install(force: bool = False) -> None:
+    """Register the compat API as ``hypothesis`` if the real one is absent."""
+    if not force:
+        try:
+            import hypothesis  # noqa: F401  (real package wins)
+            return
+        except ImportError:
+            pass
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = __doc__
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "booleans"):
+        setattr(strategies, name, globals()[name])
+    strategies.SearchStrategy = SearchStrategy
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,16 @@
+"""Shared test bootstrap.
+
+The offline CI image has no ``hypothesis``; install the deterministic compat
+shim before the property-test modules are collected.  With the real package
+available the shim is a no-op.
+"""
+import pathlib
+import sys
+
+_SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+if str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
+
+from repro.testing import hypothesis_compat
+
+hypothesis_compat.install()

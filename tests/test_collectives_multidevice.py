@@ -1,0 +1,15 @@
+"""Two-level vs flat vs XLA-native collectives against numpy oracles,
+on 8 fake devices in a subprocess, for both C·L factorizations."""
+import pytest
+
+from repro.testing.subproc import run_check
+
+
+@pytest.mark.parametrize("C,L", [(4, 2), (2, 4)])
+def test_two_level_collectives_match_oracle(C, L):
+    out = run_check("repro.testing.check_collectives", str(C), str(L),
+                    devices=8)
+    assert "check_collectives OK" in out
+    # every variant row must have validated against its oracle
+    rows = [l for l in out.splitlines() if l.startswith("coll/")]
+    assert len(rows) >= 11 and all(r.endswith(",ok") for r in rows), rows

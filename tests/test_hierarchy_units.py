@@ -1,0 +1,62 @@
+"""Single-device units for the hierarchy plumbing: staged-network round
+counts, the log-tree partial combiner, and the hierarchical Pallas dotprod."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.glsu import n_staged_rounds
+from repro.core.ring import HIERARCHIES
+from repro.kernels import ops
+from repro.kernels.reduction import combine_partials, dotprod_hier
+
+
+def test_n_staged_rounds_matches_route_schedule():
+    # n=1 runs zero ppermute rounds (the _route_buckets loop never enters);
+    # the cost model must agree — this was the seed off-by-one.
+    assert n_staged_rounds(1) == 0
+    for n in (2, 4, 8, 16, 64):
+        assert n_staged_rounds(n) == int(np.log2(n))
+
+
+@pytest.mark.parametrize("C,L", [(4, 2), (2, 4), (1, 8), (8, 1), (2, 3)])
+def test_combine_partials_matches_sum(C, L):
+    rng = np.random.default_rng(0)
+    parts = rng.integers(-100, 100, size=C * L)
+    for h in HIERARCHIES:
+        got = combine_partials(jnp.asarray(parts), C, L, hierarchy=h)
+        assert int(got) == int(parts.sum())     # integer adds: bit-for-sum
+
+
+def test_combine_partials_max():
+    parts = jnp.asarray([3.0, -1.0, 7.0, 2.0, 0.0, 5.0, -9.0, 4.0])
+    for h in HIERARCHIES:
+        got = combine_partials(parts, 4, 2, hierarchy=h, op=jnp.maximum)
+        assert float(got) == 7.0
+
+
+def test_combine_partials_rejects_unknown_hierarchy():
+    with pytest.raises(ValueError):
+        combine_partials(jnp.zeros(8), 4, 2, hierarchy="three-level")
+
+
+@pytest.mark.parametrize("C,L", [(4, 2), (2, 4)])
+@pytest.mark.parametrize("hierarchy", HIERARCHIES)
+def test_dotprod_hier_interpret(C, L, hierarchy):
+    n = C * L
+    N = n * 8 * 64
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=N), jnp.float32)
+    b = jnp.asarray(rng.normal(size=N), jnp.float32)
+    got = dotprod_hier(a, b, C=C, L=L, block=64, hierarchy=hierarchy,
+                       interpret=True)
+    np.testing.assert_allclose(float(got), float(np.asarray(a) @ np.asarray(b)),
+                               rtol=1e-4)
+
+
+def test_dotprod_hier_ops_wrapper_pads():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=5000), jnp.float32)   # not a quantum multiple
+    b = jnp.asarray(rng.normal(size=5000), jnp.float32)
+    got = ops.dotprod_hier(a, b, C=2, L=2, block=64, use_pallas=True)
+    np.testing.assert_allclose(float(got), float(np.asarray(a) @ np.asarray(b)),
+                               rtol=1e-4)
