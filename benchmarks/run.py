@@ -1,8 +1,21 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Sections:
+Prints ``name,us_per_call,derived`` CSV rows and (for the sim sections)
+merges the derived numbers into machine-readable ``BENCH_sim.json`` at the
+repo root, so the perf trajectory is trackable across PRs.
+
+All sim sections price the interconnect through the shared
+:class:`repro.topology.Topology` (``AraXLParams.topology`` — the same value
+``repro.core.machine.make_machine`` emulates).  ``--hierarchy`` selects which
+interconnect the fig6 weak-scaling curves use; fig6 always also reports the
+flat-vs-two-level ablation and the C x L factorisation sweep at 64 lanes
+(16x4 / 8x8 / 4x16 ...), reproducing the paper's §III-B.4 claim that the
+hierarchy — not the flattened ring — is what scales.
+
+Sections:
 
   fig6   performance scalability (weak scaling, normalized to 8-lane Ara2)
+         + flat-vs-two-level ablation + 64-lane C x L factorisation sweep
   fig7   interface latency tolerance (utilization drop per register cut)
   tab1   kernel peak-rate check (Table I max-perf model vs simulated)
   tab2   area model vs published kGE breakdown
@@ -15,17 +28,25 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   roof   roofline summary per dry-run cell (requires results/dryrun/*.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+           [--hierarchy flat|two-level|both] [--json PATH | --no-json]
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import sys
 import time
 
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
 
 import numpy as np
+
+KERNELS = ["fmatmul", "fconv2d", "jacobi2d", "fdotproduct", "exp", "softmax"]
+
+#: machine-readable results of the sim sections, merged into BENCH_sim.json
+BENCH: dict = {}
 
 
 def _t(fn, *args, reps=3, **kw):
@@ -36,22 +57,65 @@ def _t(fn, *args, reps=3, **kw):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
-def bench_fig6():
+def bench_fig6(hierarchies=("flat", "two-level")):
     from repro.sim import ara2_params, araxl_params, build_trace, simulate
-    kernels = ["fmatmul", "fconv2d", "jacobi2d", "fdotproduct", "exp",
-               "softmax"]
+    from repro.topology import factorizations
     base = {}
-    for k in kernels:
+    for k in KERNELS:
         p8 = ara2_params(8)
         r8 = simulate(build_trace(k, p8, 512), p8)
         base[k] = r8.flop_per_cycle
-    for lanes in (8, 16, 32, 64):
-        p = araxl_params(lanes)
-        for k in kernels:
-            us, res = _t(lambda: simulate(build_trace(k, p, 512), p))
-            scale = res.flop_per_cycle / base[k]
-            print(f"fig6/{k}/L{lanes},{us:.0f},"
-                  f"scale={scale:.2f}x util={res.utilization:.3f}")
+
+    seen64 = {}                        # (hierarchy, kernel) -> 64-lane scale
+
+    def scale(k, p):
+        key = (p.hierarchy, k) if p.n_lanes == 64 else None
+        if key in seen64:
+            return seen64[key]
+        s = simulate(build_trace(k, p, 512), p).flop_per_cycle / base[k]
+        if key is not None:
+            seen64[key] = s
+        return s
+
+    fig6 = BENCH.setdefault("fig6", {})
+    for h in hierarchies:
+        curves = fig6.setdefault(h, {})
+        for lanes in (8, 16, 32, 64):
+            p = araxl_params(lanes, hierarchy=h)
+            for k in KERNELS:
+                us, res = _t(lambda: simulate(build_trace(k, p, 512), p))
+                s = res.flop_per_cycle / base[k]
+                if lanes == 64:
+                    seen64[(h, k)] = s
+                curves.setdefault(k, {})[str(lanes)] = round(s, 3)
+                print(f"fig6/{k}/L{lanes}/{h},{us:.0f},"
+                      f"scale={s:.2f}x util={res.utilization:.3f}")
+
+    # Flat-vs-two-level ablation at the flagship 64 lanes (always reported):
+    # the two-level interconnect must never scale worse than the flat ring.
+    p2, pf = araxl_params(64), araxl_params(64, hierarchy="flat")
+    BENCH["red_tree_lat_64"] = {"flat": pf.red_tree_lat(),
+                                "two-level": p2.red_tree_lat()}
+    print(f"fig6/red_tree/L64,0,flat={pf.red_tree_lat():.0f}cyc "
+          f"two-level={p2.red_tree_lat():.0f}cyc")
+    ablate = BENCH.setdefault("fig6_ablation_64", {})
+    for k in KERNELS:
+        sf, s2 = scale(k, pf), scale(k, p2)
+        ablate[k] = {"flat": round(sf, 3), "two-level": round(s2, 3)}
+        print(f"fig6/ablate/{k},0,flat={sf:.2f}x two-level={s2:.2f}x")
+
+    # C x L factorisation sweep: 64 lanes as 16x4 / 8x8 / 4x16 / ... — how
+    # the same silicon scales under different cluster groupings.
+    grid = BENCH.setdefault("fig6_grid_64", {})
+    for C, L in factorizations(64):
+        p = araxl_params(64, lanes_per_cluster=L)
+        tag = f"C{C}xL{L}"
+        grid[tag] = {"red_tree_lat": p.red_tree_lat()}
+        for k in ("softmax", "fdotproduct"):
+            s = scale(k, p)
+            grid[tag][k] = round(s, 3)
+            print(f"fig6/grid/{k}/{tag},0,scale={s:.2f}x "
+                  f"tree={p.red_tree_lat():.0f}cyc")
 
 
 def bench_fig7():
@@ -59,12 +123,13 @@ def bench_fig7():
     cuts = [("glsu+4", dict(glsu=4)), ("reqi+1", dict(reqi=1)),
             ("ringi+1", dict(ringi=1))]
     p0 = araxl_params(64)
+    fig7 = BENCH.setdefault("fig7", {})
     for name, kw in cuts:
-        for k in ("fmatmul", "fconv2d", "jacobi2d", "fdotproduct", "exp",
-                  "softmax"):
+        for k in KERNELS:
             p1 = p0.with_cuts(**kw)
             u0 = simulate(build_trace(k, p0, 512), p0).utilization
             u1 = simulate(build_trace(k, p1, 512), p1).utilization
+            fig7.setdefault(name, {})[k] = round(100 * (u0 - u1), 3)
             print(f"fig7/{name}/{k},0,drop={100*(u0-u1):.2f}%")
 
 
@@ -72,10 +137,12 @@ def bench_tab1():
     from repro.sim import araxl_params, build_trace, simulate
     from repro.sim.kernels import max_perf_flop_per_cycle
     p = araxl_params(64)
-    for k in ("fmatmul", "fconv2d", "jacobi2d", "fdotproduct", "exp",
-              "softmax"):
+    tab1 = BENCH.setdefault("tab1", {})
+    for k in KERNELS:
         res = simulate(build_trace(k, p, 512), p)
         peak = max_perf_flop_per_cycle(k, 64)
+        tab1[k] = {"flop_per_cycle": round(res.flop_per_cycle, 2),
+                   "peak": peak}
         print(f"tab1/{k},0,fpc={res.flop_per_cycle:.1f}/"
               f"{peak:.1f} ({100*res.flop_per_cycle/peak:.0f}% of Table-I peak)")
 
@@ -83,10 +150,14 @@ def bench_tab1():
 def bench_tab2():
     from repro.sim import araxl_params
     from repro.sim import paper, ppa
+    tab2 = BENCH.setdefault("tab2", {})
     for lanes in (16, 32, 64):
         got = ppa.area_breakdown_kge(araxl_params(lanes))
         want = paper.TABLE_II_KGE[lanes]
         err = 100 * (got["total"] - want["total"]) / want["total"]
+        tab2[str(lanes)] = {"model_kge": round(got["total"], 1),
+                            "paper_kge": want["total"],
+                            "err_pct": round(err, 2)}
         print(f"tab2/area/L{lanes},0,model={got['total']:.0f}kGE "
               f"paper={want['total']}kGE err={err:+.1f}% "
               f"ifc={100*ppa.interface_area_fraction(araxl_params(lanes)):.1f}%")
@@ -95,6 +166,7 @@ def bench_tab2():
 def bench_tab3():
     from repro.sim import araxl_params, build_trace, simulate
     from repro.sim import paper, ppa
+    tab3 = BENCH.setdefault("tab3", {})
     for lanes in (16, 32, 64):
         p = araxl_params(lanes)
         u = simulate(build_trace("fmatmul", p, 512), p).utilization
@@ -102,6 +174,10 @@ def bench_tab3():
         eeff = ppa.energy_eff_gflops_per_w(p, u)
         aeff = ppa.area_eff_gflops_per_mm2(p, u)
         w = paper.TABLE_III[lanes]
+        tab3[str(lanes)] = {"perf_gflops": round(perf, 2),
+                            "energy_eff": round(eeff, 2),
+                            "area_eff": round(aeff, 2),
+                            "paper": list(w)}
         print(f"tab3/ppa/L{lanes},0,"
               f"perf={perf:.1f}GF(paper {w[1]}) "
               f"eeff={eeff:.1f}GF/W(paper {w[2]}) "
@@ -153,7 +229,7 @@ def bench_collectives():
 
 
 def bench_roofline():
-    outdir = pathlib.Path(__file__).resolve().parents[1] / "results/dryrun"
+    outdir = ROOT / "results/dryrun"
     cells = sorted(outdir.glob("*.json")) if outdir.exists() else []
     if not cells:
         print("roof/none,0,run `python -m repro.launch.dryrun --all` first")
@@ -177,12 +253,60 @@ SECTIONS = {
     "ring": bench_ring, "coll": bench_collectives, "roof": bench_roofline,
 }
 
+#: sections whose derived numbers land in BENCH_sim.json
+SIM_SECTIONS = ("fig6", "fig7", "tab1", "tab2", "tab3")
 
-def main() -> None:
-    which = sys.argv[1:] or list(SECTIONS)
+
+def _deep_merge(base: dict, new: dict) -> dict:
+    """Merge ``new`` into ``base`` recursively so a partial run (e.g. fig6
+    --hierarchy flat) updates only its own sub-keys instead of wiping the
+    sibling curves saved by earlier runs."""
+    for k, v in new.items():
+        if isinstance(v, dict) and isinstance(base.get(k), dict):
+            _deep_merge(base[k], v)
+        else:
+            base[k] = v
+    return base
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("sections", nargs="*", default=[], metavar="section",
+                    help=f"one of {', '.join(SECTIONS)} (default: all)")
+    ap.add_argument("--hierarchy", choices=["flat", "two-level", "both"],
+                    default="both",
+                    help="interconnect for the fig6 weak-scaling curves")
+    ap.add_argument("--json", default=str(ROOT / "BENCH_sim.json"),
+                    help="where to merge the machine-readable sim results")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_sim.json")
+    args = ap.parse_args(argv)
+    unknown = [s for s in args.sections if s not in SECTIONS]
+    if unknown:
+        ap.error(f"unknown section(s) {unknown}; pick from "
+                 f"{', '.join(SECTIONS)}")
+    which = args.sections or list(SECTIONS)
+    hierarchies = (("flat", "two-level") if args.hierarchy == "both"
+                   else (args.hierarchy,))
+
     print("name,us_per_call,derived")
     for name in which:
-        SECTIONS[name]()
+        if name == "fig6":
+            bench_fig6(hierarchies)
+        else:
+            SECTIONS[name]()
+
+    if not args.no_json and any(s in SIM_SECTIONS for s in which):
+        path = pathlib.Path(args.json)
+        merged = {}
+        if path.exists():
+            try:
+                merged = json.loads(path.read_text())
+            except (json.JSONDecodeError, OSError):
+                merged = {}
+        _deep_merge(merged, BENCH)
+        path.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
+        print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == '__main__':

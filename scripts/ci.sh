@@ -11,3 +11,9 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# Fast sim-only benchmark smoke: the analytical model (fig7 latency
+# tolerance + tab2 area) must run end-to-end, so cost-model regressions
+# fail tier-1 instead of waiting for eyeballs on the full benchmark run.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run fig7 tab2 --no-json > /dev/null
+echo "sim benchmark smoke OK (fig7 tab2)"

@@ -1,11 +1,13 @@
 """AraXL core: distributed long-vector register file, ring interconnect,
 staged GLSU, and the vector ISA — the paper's contribution as JAX modules."""
+from repro.topology import Topology
 from .isa import AraXLMachine, InstrRecord
 from .layout import (VReg, VectorLayout, VectorMachineSpec, coords_to_element,
                      element_to_coords)
 from .machine import make_machine, make_vector_mesh
 
 __all__ = [
-    "AraXLMachine", "InstrRecord", "VReg", "VectorLayout", "VectorMachineSpec",
-    "coords_to_element", "element_to_coords", "make_machine", "make_vector_mesh",
+    "AraXLMachine", "InstrRecord", "Topology", "VReg", "VectorLayout",
+    "VectorMachineSpec", "coords_to_element", "element_to_coords",
+    "make_machine", "make_vector_mesh",
 ]

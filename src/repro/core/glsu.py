@@ -49,7 +49,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import substrate
 from .layout import VectorLayout, VectorMachineSpec
-from .ring import _check_hierarchy, ppermute_shift, ring_pos
+from .ring import _resolve_hierarchy, ppermute_shift, ring_pos
 
 
 # ---------------------------------------------------------------------------
@@ -148,9 +148,10 @@ def n_staged_rounds(n: int) -> int:
 # mem -> reg (vector load through the GLSU)
 # ---------------------------------------------------------------------------
 
-def _make_router(spec: VectorMachineSpec, hierarchy: str):
-    """The Align-stage routing schedule for ``spec`` (flat or two-level)."""
-    _check_hierarchy(hierarchy)
+def _make_router(spec: VectorMachineSpec, hierarchy: str | None):
+    """The Align-stage routing schedule for ``spec`` (flat or two-level;
+    None takes the hierarchy of the spec's shared Topology)."""
+    hierarchy = _resolve_hierarchy(spec, hierarchy)
     if hierarchy == "two-level":
         return lambda buf: _route_buckets_two_level(
             buf, spec.cluster_axes, spec.n_clusters,
@@ -185,7 +186,7 @@ def _mem_to_reg_local(xloc: jax.Array, axis_names: Sequence[str], n: int,
 
 
 def mem_to_reg(spec: VectorMachineSpec, x: jax.Array, mode: str = "staged",
-               hierarchy: str = "flat") -> jax.Array:
+               hierarchy: str | None = None) -> jax.Array:
     """Vector load: 1-D memory-layout array (length B*n, blocked-sharded over
     the ring) -> (B, C, L) striped register."""
     n = spec.n_total_lanes
@@ -235,7 +236,7 @@ def _reg_to_mem_local(col: jax.Array, axis_names: Sequence[str], n: int,
 
 
 def reg_to_mem(spec: VectorMachineSpec, reg: jax.Array, mode: str = "staged",
-               hierarchy: str = "flat") -> jax.Array:
+               hierarchy: str | None = None) -> jax.Array:
     n = spec.n_total_lanes
     B = reg.shape[0]
     if mode == "direct":

@@ -51,7 +51,8 @@ class AraXLMachine:
     implementations vs flat XLA collectives (the §Perf ablation switch);
     ``hierarchy`` ("flat" | "two-level") picks the flattened lane ring or the
     paper's intra-cluster/inter-cluster two-level interconnect for both the
-    staged GLSU Align network and the RINGI reductions.
+    staged GLSU Align network and the RINGI reductions — defaulting to the
+    hierarchy of the spec's shared :class:`repro.topology.Topology`.
     """
 
     #: ops counted with >1 flop/element (paper Table I: exp is a 7-term
@@ -59,12 +60,13 @@ class AraXLMachine:
     _EXP_FLOPS = 28.0
 
     def __init__(self, spec: VectorMachineSpec, *, glsu_mode: str = "staged",
-                 reduce_mode: str = "ring", hierarchy: str = "flat",
+                 reduce_mode: str = "ring", hierarchy: Optional[str] = None,
                  dtype=jnp.float32, trace: Optional[list] = None):
         self.spec = spec
         self.glsu_mode = glsu_mode
         self.reduce_mode = reduce_mode
-        self.hierarchy = hierarchy
+        self.hierarchy = (hierarchy if hierarchy is not None
+                          else spec.topology.hierarchy)
         self.dtype = dtype
         self.trace = trace
 

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.topology import Topology
+
 Axis = str | tuple[str, ...]
 
 
@@ -54,6 +56,13 @@ class VectorMachineSpec:
     ``cluster_axis`` plays AraXL's inter-cluster role (RINGI/GLSU hierarchy
     level), ``lane_axis`` the intra-cluster lanes.  On the production mesh
     these are ("pod","data") and "model" respectively.
+
+    ``topology`` is the shared :class:`repro.topology.Topology` — the same
+    value ``repro.sim.AraXLParams.topology`` exposes.  When omitted it is
+    derived from the mesh (flat hierarchy, the emulator's historical
+    default); when given, its grid must match the mesh axis sizes, and
+    ``repro.core.ring`` / ``repro.core.glsu`` take their default hierarchy
+    from it.
     """
 
     mesh: Mesh
@@ -61,6 +70,17 @@ class VectorMachineSpec:
     lane_axis: Axis = "lane"
     vlen_bits: int = 65536          # RVV-maximum 64 Kibit / vreg (the paper's flagship)
     sew_bits: int = 64              # DP elements, as evaluated in the paper
+    topology: Topology | None = None
+
+    def __post_init__(self):
+        if self.topology is None:
+            object.__setattr__(self, "topology", Topology(
+                self.n_clusters, self.n_lanes, hierarchy="flat",
+                cluster_axis=self.cluster_axis, lane_axis=self.lane_axis))
+        elif self.topology.grid != (self.n_clusters, self.n_lanes):
+            raise ValueError(
+                f"topology grid {self.topology.grid} does not match the mesh "
+                f"axis sizes ({self.n_clusters}, {self.n_lanes})")
 
     @property
     def n_clusters(self) -> int:

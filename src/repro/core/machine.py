@@ -1,9 +1,19 @@
-"""Machine construction helpers (the REQI view: one program, many clusters)."""
+"""Machine construction helpers (the REQI view: one program, many clusters).
+
+``make_machine`` is topology-first: pass a :class:`repro.topology.Topology`
+(e.g. ``repro.sim.araxl_params(8).topology``) and the mesh axes, cluster/lane
+grid, and interconnect hierarchy are all derived from it — the emulator and
+the analytical cost model then provably share one geometry value
+(``machine.spec.topology == params.topology``).  The legacy
+``make_machine(C, L, hierarchy=...)`` form still works and builds the
+equivalent Topology internally.
+"""
 from __future__ import annotations
 
 import jax
 from jax.sharding import Mesh
 
+from repro.topology import Topology
 from .isa import AraXLMachine
 from .layout import VectorMachineSpec
 
@@ -15,13 +25,32 @@ def make_vector_mesh(n_clusters: int, n_lanes: int,
     return jax.make_mesh((n_clusters, n_lanes), (cluster_axis, lane_axis))
 
 
-def make_machine(n_clusters: int, n_lanes: int, *, vlen_bits: int = 65536,
+def make_machine(n_clusters: int | None = None, n_lanes: int | None = None,
+                 *, topology: Topology | None = None, vlen_bits: int = 65536,
                  sew_bits: int = 64, glsu_mode: str = "staged",
-                 reduce_mode: str = "ring", hierarchy: str = "flat",
+                 reduce_mode: str = "ring", hierarchy: str | None = None,
                  dtype=None, trace: list | None = None) -> AraXLMachine:
     import jax.numpy as jnp
-    mesh = make_vector_mesh(n_clusters, n_lanes)
-    spec = VectorMachineSpec(mesh, "cluster", "lane", vlen_bits, sew_bits)
+    if topology is None:
+        if n_clusters is None or n_lanes is None:
+            raise ValueError("pass either topology= or (n_clusters, n_lanes)")
+        # Historical default: the flattened ring unless asked otherwise.
+        topology = Topology(n_clusters, n_lanes,
+                            hierarchy=hierarchy or "flat")
+    else:
+        if (n_clusters, n_lanes) != (None, None) and \
+                (n_clusters, n_lanes) != topology.grid:
+            raise ValueError(f"(n_clusters, n_lanes)=({n_clusters}, "
+                             f"{n_lanes}) conflicts with topology grid "
+                             f"{topology.grid}")
+        if hierarchy is not None:
+            topology = topology.with_hierarchy(hierarchy)
+    if not (isinstance(topology.cluster_axis, str)
+            and isinstance(topology.lane_axis, str)):
+        raise ValueError("make_machine needs single-name topology axes")
+    mesh = make_vector_mesh(topology.n_clusters, topology.lanes_per_cluster,
+                            topology.cluster_axis, topology.lane_axis)
+    spec = VectorMachineSpec(mesh, topology.cluster_axis, topology.lane_axis,
+                             vlen_bits, sew_bits, topology=topology)
     return AraXLMachine(spec, glsu_mode=glsu_mode, reduce_mode=reduce_mode,
-                        hierarchy=hierarchy, dtype=dtype or jnp.float32,
-                        trace=trace)
+                        dtype=dtype or jnp.float32, trace=trace)

@@ -6,7 +6,10 @@ code are slide-by-1 (stencils, shifted products) and reductions — both
 neighbour-only.  On TPU the ICI torus makes ``ppermute`` (a physical
 neighbour hop when the permutation is a ring shift) the exact analogue.
 
-Two interconnect models coexist, selected by ``hierarchy=``:
+Two interconnect models coexist, selected by ``hierarchy=`` (defaulting to
+the hierarchy of the spec's shared :class:`repro.topology.Topology` — the
+same geometry type ``repro.sim.AraXLParams`` composes, so the emulator and
+the analytical cost model always describe the same interconnect):
 
 ``"flat"``       the flattened ring of all n = C·L lanes (cluster-major,
                  lane-minor — the same order as the element striping): every
@@ -42,16 +45,18 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import substrate
+from repro.topology import HIERARCHIES, check_hierarchy as _check_hierarchy
 from .layout import VectorLayout, VectorMachineSpec
 
-HIERARCHIES = ("flat", "two-level")
 MODES = ("ring", "xla")
 
 
-def _check_hierarchy(hierarchy: str) -> None:
-    if hierarchy not in HIERARCHIES:
-        raise ValueError(f"hierarchy must be one of {HIERARCHIES}, "
-                         f"got {hierarchy!r}")
+def _resolve_hierarchy(spec: VectorMachineSpec, hierarchy: str | None) -> str:
+    """None -> the hierarchy of the spec's shared Topology."""
+    if hierarchy is None:
+        return spec.topology.hierarchy
+    _check_hierarchy(hierarchy)
+    return hierarchy
 
 
 def _check_mode(mode: str) -> None:
@@ -307,13 +312,14 @@ def slide1up(spec: VectorMachineSpec, data: jax.Array, fill: float = 0.0) -> jax
 
 
 def reduce_scalar(spec: VectorMachineSpec, data: jax.Array, op: str = "sum",
-                  mode: str = "ring", hierarchy: str = "flat") -> jax.Array:
+                  mode: str = "ring", hierarchy: str | None = None) -> jax.Array:
     """Full-register reduction. mode='ring' is the paper-faithful log-tree on
     neighbour hops; mode='xla' lets XLA pick (flat all-reduce) — the §Perf
     comparison point.  With mode='ring', ``hierarchy`` selects the flattened
-    ring or the paper's two-level intra-cluster/inter-cluster pipeline."""
+    ring or the paper's two-level intra-cluster/inter-cluster pipeline
+    (default: the spec's Topology hierarchy)."""
     _check_mode(mode)
-    _check_hierarchy(hierarchy)
+    hierarchy = _resolve_hierarchy(spec, hierarchy)
     axes, n = spec.ring_axes, spec.n_total_lanes
     reg = spec.reg_spec(VectorLayout.STRIPED)
 
@@ -338,7 +344,7 @@ def reduce_scalar(spec: VectorMachineSpec, data: jax.Array, op: str = "sum",
 
 
 def ring_allgather(spec: VectorMachineSpec, data: jax.Array,
-                   mode: str = "ring", hierarchy: str = "flat") -> jax.Array:
+                   mode: str = "ring", hierarchy: str | None = None) -> jax.Array:
     """All-gather over the lane ring.
 
     ``data`` is (n_total, B): row p is ring position p's shard (sharded
@@ -346,7 +352,7 @@ def ring_allgather(spec: VectorMachineSpec, data: jax.Array,
     full ring-order concatenation (replicated along the ring).  mode='xla'
     is the XLA-native all-gather baseline."""
     _check_mode(mode)
-    _check_hierarchy(hierarchy)
+    hierarchy = _resolve_hierarchy(spec, hierarchy)
     axes, n = spec.ring_axes, spec.n_total_lanes
     assert data.ndim == 2 and data.shape[0] == n, data.shape
     in_spec = P(axes, None)
@@ -368,7 +374,7 @@ def ring_allgather(spec: VectorMachineSpec, data: jax.Array,
 
 
 def ring_reduce_scatter(spec: VectorMachineSpec, data: jax.Array,
-                        mode: str = "ring", hierarchy: str = "flat"
+                        mode: str = "ring", hierarchy: str | None = None
                         ) -> jax.Array:
     """Reduce-scatter over the lane ring.
 
@@ -377,7 +383,7 @@ def ring_reduce_scatter(spec: VectorMachineSpec, data: jax.Array,
     chunk p of the elementwise sum of all rows.  mode='xla' is the XLA-native
     reduce-scatter baseline."""
     _check_mode(mode)
-    _check_hierarchy(hierarchy)
+    hierarchy = _resolve_hierarchy(spec, hierarchy)
     axes, n = spec.ring_axes, spec.n_total_lanes
     assert data.ndim == 2 and data.shape[0] == n, data.shape
     assert data.shape[1] % n == 0, data.shape

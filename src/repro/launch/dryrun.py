@@ -14,6 +14,12 @@ Per cell we compile:
 Usage:
   python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
   python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+  python -m repro.launch.dryrun --arch llama3-8b --topology 32x8:two-level
+
+``--topology CxL[:hierarchy]`` overrides the production mesh with an explicit
+cluster x lane grid (clusters on the `data` axis, lanes on `model`) — the
+same :class:`repro.topology.Topology` value the sim layer prices, so the
+fig6/fig7 factorisation sweeps and the compile surface stay in lock-step.
 """
 # The VERY FIRST lines — before ANY other import (jax locks device count on
 # first init).
@@ -37,6 +43,7 @@ from repro.configs import SHAPES, get_config, list_archs
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_shardings, input_specs
+from repro.topology import parse_topology
 from repro.models import lm
 from repro.parallel.sharding import (abstract_params, default_rules,
                                      param_shardings)
@@ -248,21 +255,36 @@ def main():
     ap.add_argument("--shape", action="append", default=None)
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="single")
+    ap.add_argument("--topology", default=None, metavar="CxL[:hierarchy]",
+                    help="override the mesh with an explicit Topology grid "
+                         "(clusters on `data`, lanes on `model`)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
 
     archs = args.arch or (list_archs() if args.all else ["llama3-8b"])
     shapes = args.shape or list(SHAPES)
-    meshes = {"single": [False], "multi": [True],
-              "both": [False, True]}[args.mesh]
     outdir = pathlib.Path(args.out)
     outdir.mkdir(parents=True, exist_ok=True)
 
+    topo = None
+    if args.topology is not None:
+        if args.mesh != "single":
+            ap.error("--topology replaces the pod mesh entirely; drop "
+                     "--mesh (or run the pod meshes in a separate invocation)")
+        topo = parse_topology(args.topology, cluster_axis="data",
+                              lane_axis="model")
+        mesh_plan = [(make_production_mesh(topology=topo),
+                      f"topo{topo.n_clusters}x{topo.lanes_per_cluster}-"
+                      f"{topo.hierarchy}")]
+    else:
+        meshes = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
+        mesh_plan = [(make_production_mesh(multi_pod=m),
+                      "pod2x16x16" if m else "pod16x16") for m in meshes]
+
     failures = []
-    for multi in meshes:
-        mesh = make_production_mesh(multi_pod=multi)
-        mname = "pod2x16x16" if multi else "pod16x16"
+    for mesh, mname in mesh_plan:
         for arch in archs:
             cfg = get_config(arch)
             for sname in shapes:
@@ -279,6 +301,8 @@ def main():
                     continue
                 try:
                     rec = analyse_cell(cfg, shape, mesh, mname)
+                    if topo is not None:
+                        rec["topology"] = topo.describe()
                     path.write_text(json.dumps(rec, indent=2))
                     r = rec["roofline"]
                     print(f"[ok] {arch} x {sname} x {mname}: "

@@ -5,13 +5,36 @@ never touches jax device state.  The single-pod mesh is 16x16 = 256 chips
 (a TPU v5e pod); multi-pod adds a leading 2-pod axis (512 chips) — the AraXL
 hierarchy: `model` = lanes within a cluster, `data` = clusters, `pod` = the
 next ring level.
+
+The geometry is also expressible as a shared :class:`repro.topology.Topology`
+(``production_topology()``), and ``make_production_mesh(topology=...)``
+builds the mesh straight from one — the same value ``repro.sim`` prices and
+``repro.core.machine.make_machine`` emulates, so a fig6/fig7 C x L sweep and
+a dry-run compile describe the identical machine.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.topology import Topology
 
-def make_production_mesh(*, multi_pod: bool = False):
+
+def production_topology(*, multi_pod: bool = False) -> Topology:
+    """The production geometry as a Topology: clusters ride the `data` axis
+    (x2 pods fold into more clusters), lanes the `model` axis."""
+    return Topology(32 if multi_pod else 16, 16, hierarchy="two-level",
+                    cluster_axis="data", lane_axis="model")
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         topology: Topology | None = None):
+    if topology is not None:
+        if multi_pod:
+            raise ValueError("multi_pod and topology= are mutually exclusive "
+                             "(fold the pods into n_clusters instead)")
+        return jax.make_mesh(
+            (topology.n_clusters, topology.lanes_per_cluster),
+            (topology.cluster_axis, topology.lane_axis))
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)

@@ -35,6 +35,7 @@ from repro.configs import SHAPES, get_config
 from repro.launch import dryrun as dr
 from repro.launch.mesh import make_production_mesh
 from repro.parallel.sharding import ShardingRules, default_rules
+from repro.topology import Topology, parse_topology
 
 
 def _fsdp_pure_rules(mesh, cfg, shape):
@@ -76,10 +77,14 @@ def apply_strategy(strategy: str, cfg, shape, mesh):
     raise ValueError(strategy)
 
 
-def analyse(arch: str, shape_name: str, strategy: str, multi: bool = False):
+def analyse(arch: str, shape_name: str, strategy: str, multi: bool = False,
+            topology: Topology | None = None):
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi)
+    mesh = make_production_mesh(multi_pod=multi, topology=topology)
+    mname = (f"topo{topology.n_clusters}x{topology.lanes_per_cluster}-"
+             f"{topology.hierarchy}" if topology is not None else
+             "pod2x16x16" if multi else "pod16x16")
     cfg, rules_override, nm_override = apply_strategy(strategy, cfg, shape,
                                                       mesh)
     # monkey-patch the dryrun cell builder's rules when overridden
@@ -91,8 +96,7 @@ def analyse(arch: str, shape_name: str, strategy: str, multi: bool = False):
             orig_nm = dr.n_microbatches
             dr.n_microbatches = lambda *a, **k: nm_override
         try:
-            rec = dr.analyse_cell(cfg, shape, mesh,
-                                  "pod2x16x16" if multi else "pod16x16")
+            rec = dr.analyse_cell(cfg, shape, mesh, mname)
         finally:
             if nm_override is not None:
                 dr.n_microbatches = orig_nm
@@ -100,6 +104,8 @@ def analyse(arch: str, shape_name: str, strategy: str, multi: bool = False):
         if rules_override is not None:
             dr.build_rules = orig
     rec["strategy"] = strategy
+    if topology is not None:
+        rec["topology"] = topology.describe()
     return rec
 
 
@@ -108,17 +114,25 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
     ap.add_argument("--strategy", action="append", required=True)
+    ap.add_argument("--topology", default=None, metavar="CxL[:hierarchy]",
+                    help="override the mesh with an explicit Topology grid "
+                         "(clusters on `data`, lanes on `model`)")
     ap.add_argument("--out", default="results/perf")
     args = ap.parse_args()
+    topo = (parse_topology(args.topology, cluster_axis="data",
+                           lane_axis="model")
+            if args.topology is not None else None)
+    tsuffix = (f"__topo{topo.n_clusters}x{topo.lanes_per_cluster}-"
+               f"{topo.hierarchy}" if topo is not None else "")
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     for strat in args.strategy:
-        path = out / f"{args.arch}__{args.shape}__{strat}.json"
+        path = out / f"{args.arch}__{args.shape}__{strat}{tsuffix}.json"
         if path.exists():
             print(f"[cached] {path}")
             continue
         try:
-            rec = analyse(args.arch, args.shape, strat)
+            rec = analyse(args.arch, args.shape, strat, topology=topo)
             path.write_text(json.dumps(rec, indent=2))
             r = rec["roofline"]
             print(f"[ok] {args.arch} x {args.shape} x {strat}: "

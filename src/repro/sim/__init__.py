@@ -5,10 +5,12 @@ Reproduces the paper's evaluation without RTL: weak-scaling performance
 II/III), from instruction traces of the paper's kernels replayed through a
 chained-unit pipeline model.
 """
+from repro.topology import Topology
 from .params import AraXLParams, ara2_params, araxl_params
 from .engine import simulate, SimResult
 from .kernels import build_trace, KERNEL_BUILDERS
 from .trace import TraceMachine
 
-__all__ = ["AraXLParams", "ara2_params", "araxl_params", "simulate",
-           "SimResult", "build_trace", "KERNEL_BUILDERS", "TraceMachine"]
+__all__ = ["AraXLParams", "Topology", "ara2_params", "araxl_params",
+           "simulate", "SimResult", "build_trace", "KERNEL_BUILDERS",
+           "TraceMachine"]

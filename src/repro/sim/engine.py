@@ -11,11 +11,15 @@ The model captures the mechanisms the paper's evaluation turns on:
   and pays d-cache latency for interleaved scalar operands;
 * vector loads see the GLSU request-response latency (``glsu_lat``) before
   the first element lands;
-* slides pay ``hop_lat`` per ring hop before streaming;
+* slides pay ``params.slide_cost(hops)`` before streaming — priced per wire
+  level by the shared :class:`repro.topology.Topology` (intra-cluster short
+  wires vs inter-cluster RINGI hops under ``hierarchy="two-level"``, every
+  hop a ring hop under ``"flat"``); traces tag each slide with the level its
+  critical path crosses;
 * reductions stream their intra-lane phase on the FPU, then pay the
   vl-independent inter-lane + inter-cluster log-tree latency
-  (``params.red_tree_lat()``) — the exact term the paper blames for the
-  softmax / fdotproduct scaling gap;
+  (``params.red_tree_lat()``, hierarchy-dependent) — the exact term the
+  paper blames for the softmax / fdotproduct scaling gap;
 * FPU utilization = FPU-busy cycles / total cycles, the paper's metric.
 """
 from __future__ import annotations
@@ -107,7 +111,7 @@ def simulate(trace: Sequence[InstrRecord], params: AraXLParams) -> SimResult:
             start = max(issue_t + params.glsu_lat, unit_free.get(unit, 0.0),
                         dep_t)
         elif rec.unit == "sldu":
-            hop = params.hop_lat * max(1, meta.get("hops", 1))
+            hop = params.slide_cost(max(1, meta.get("hops", 1)))
             start = max(issue_t, unit_free.get(unit, 0.0), dep_t + hop)
         else:
             start = max(issue_t, unit_free.get(unit, 0.0), dep_t)

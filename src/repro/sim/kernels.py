@@ -135,6 +135,9 @@ def max_perf_flop_per_cycle(kernel: str, n_lanes: int) -> float:
 
 def build_trace(kernel: str, params: AraXLParams, bytes_per_lane: int,
                 **kw) -> list:
-    v = TraceMachine(params.vlen_bits, params.sew_bits)
+    # The trace machine carries the shared Topology so slides are tagged with
+    # the wire level (intra/inter-cluster) their critical path crosses.
+    v = TraceMachine(params.vlen_bits, params.sew_bits,
+                     topology=params.topology)
     KERNEL_BUILDERS[kernel](v, params, bytes_per_lane, **kw)
     return v.trace

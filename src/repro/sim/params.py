@@ -4,12 +4,26 @@ Structural numbers (lanes/cluster, reduction stages, interface registers) come
 straight from the paper; a handful of latency constants are calibrated once so
 the model hits the paper's reported operating points (Fig. 6/7) and then kept
 frozen — see tests/test_sim_paper.py for the asserted bands and
-benchmarks/fig6_scaling.py for the full curves.
+benchmarks/run.py fig6 for the full curves.
+
+Machine *geometry* lives in :class:`repro.topology.Topology` — the same type
+the emulation layer (`repro.core.machine.make_machine`) and the launch layer
+consume.  ``AraXLParams`` composes one (``params.topology``) from its lane
+grid and interface latencies, and every geometry-dependent price
+(``red_tree_lat``, ``slide_cost``, per-level ``hop_cost``) routes through it,
+so the analytical model and the JAX emulator always price the same
+interconnect.  ``hierarchy="two-level"`` (the paper's §III-B.4 design, and
+the calibrated default) prices intra-cluster and inter-cluster wires
+separately; ``hierarchy="flat"`` prices the flattened C*L ring the paper
+argues against (every hop a long-wire RINGI hop).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
+
+from repro.topology import Topology, check_hierarchy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -17,6 +31,7 @@ class AraXLParams:
     name: str = "araxl"
     n_lanes: int = 64                 # total FPUs (= lanes; 1 DP-FPU per lane)
     lanes_per_cluster: int = 4        # the max-efficiency Ara2 building block
+    hierarchy: str = "two-level"      # §III-B.4 interconnect (vs "flat" ring)
     vlen_bits: int = 65536            # 64 Kibit/vreg (RVV 1.0 maximum)
     sew_bits: int = 64                # DP evaluation, as in the paper
     freq_ghz: float = 1.15            # 64L typical corner (1.4 up to 32L)
@@ -35,13 +50,25 @@ class AraXLParams:
     glsu_regs: int = 0                # Fig 7(a): +4 regs => +8 cycles req-resp
     ringi_regs: int = 0               # Fig 7(c): +1 reg => +1 cycle/hop
     ring_hop: float = 4.0             # base inter-cluster hop latency
+    intra_hop: float = 2.0            # short-wire intra-cluster sldu hop
     interlane_lat: float = 6.0        # intra-cluster A2A stage latency
     simd_red_cycles: float = 4.0      # final SIMD reduction stage
+
+    def __post_init__(self):
+        if self.n_lanes < 1 or self.lanes_per_cluster < 1:
+            raise ValueError(f"need n_lanes >= 1 and lanes_per_cluster >= 1, "
+                             f"got {self.n_lanes}/{self.lanes_per_cluster}")
+        if self.n_lanes % self.lanes_per_cluster:
+            raise ValueError(
+                f"n_lanes ({self.n_lanes}) must be a multiple of "
+                f"lanes_per_cluster ({self.lanes_per_cluster}); use "
+                f"with_lanes()/with_grid() which keep the grid consistent")
+        check_hierarchy(self.hierarchy)
 
     # --- derived -----------------------------------------------------------
     @property
     def n_clusters(self) -> int:
-        return max(1, self.n_lanes // self.lanes_per_cluster)
+        return self.n_lanes // self.lanes_per_cluster
 
     @property
     def vlmax(self) -> int:
@@ -58,32 +85,89 @@ class AraXLParams:
 
     @property
     def hop_lat(self) -> float:
+        """One inter-cluster RINGI hop (base + Fig 7(c) register cuts)."""
         return self.ring_hop + self.ringi_regs
+
+    @functools.cached_property
+    def topology(self) -> Topology:
+        """The shared machine geometry — the *same* value
+        ``repro.core.machine.make_machine(topology=...)`` consumes.
+        Cached: the engine prices every sldu record through it."""
+        return Topology(self.n_clusters, self.lanes_per_cluster,
+                        hierarchy=self.hierarchy,
+                        intra_hop_lat=self.intra_hop,
+                        inter_hop_lat=self.hop_lat)
+
+    def slide_cost(self, hops: int) -> float:
+        """Ring cycles before a slide by ``hops`` can stream (critical-path
+        priced per wire level by the topology)."""
+        return self.topology.slide_cost(hops)
+
+    def hop_cost(self, src: int, dst: int) -> float:
+        """Per-level price of one transfer between flattened ring positions
+        (intra- vs inter-cluster wires under the two-level hierarchy)."""
+        return self.topology.hop_cost(src, dst)
 
     def red_tree_lat(self) -> float:
         """Inter-lane + inter-cluster log-tree latency (vl-independent; this
-        is exactly why reductions break weak scaling in Fig. 6)."""
-        interlane = math.log2(self.lanes_per_cluster) * \
-            (self.interlane_lat + self.fpu_lat) if self.lanes_per_cluster > 1 else 0.0
-        intercluster = 0.0
-        c = self.n_clusters
-        s = 1
-        while s < c:                   # stage s crosses s ring hops
-            intercluster += s * self.hop_lat + self.fpu_lat
-            s *= 2
-        return interlane + intercluster + self.simd_red_cycles
+        is exactly why reductions break weak scaling in Fig. 6).
+
+        two-level (§III-B.4): log2(L) intra-cluster A2A stages (the
+        calibrated ``interlane_lat`` stage, not a bare wire hop), then a
+        log2(C) log-tree on the ring (stage s rides s hops).  flat: the same
+        log-tree run over the whole C*L flattened ring — every stage pays
+        ring-hop prices, which is what makes it strictly more expensive than
+        the hierarchy whenever L > 1 (the paper's scalability claim).  The
+        ring wire cycles come from the shared Topology; this method only
+        adds the per-stage FPU and final-SIMD terms.
+        """
+        topo = self.topology
+        if self.hierarchy == "flat":
+            n_stages = sum(1 for _ in Topology.tree_stages(self.n_lanes))
+            return (topo.tree_wire_cycles() + n_stages * self.fpu_lat
+                    + self.simd_red_cycles)
+        n_lane_stages = sum(1 for _ in Topology.tree_stages(self.lanes_per_cluster))
+        n_cluster_stages = sum(1 for _ in Topology.tree_stages(self.n_clusters))
+        interlane = n_lane_stages * (self.interlane_lat + self.fpu_lat)
+        inter_wire = sum(s * topo.inter_hop_lat
+                         for s in Topology.tree_stages(self.n_clusters))
+        return (interlane + inter_wire + n_cluster_stages * self.fpu_lat
+                + self.simd_red_cycles)
 
     def with_lanes(self, n_lanes: int) -> "AraXLParams":
         freq = 1.4 if n_lanes <= 32 else 1.15
-        return dataclasses.replace(self, n_lanes=n_lanes, freq_ghz=freq)
+        # Clamp the cluster size for tiny configs (n_lanes < lanes_per_cluster
+        # used to keep lpc=4 and misprice n_clusters/red_tree_lat); gcd both
+        # clamps and guarantees the divisibility the constructor validates.
+        lpc = math.gcd(n_lanes, self.lanes_per_cluster)
+        return dataclasses.replace(self, n_lanes=n_lanes,
+                                   lanes_per_cluster=lpc, freq_ghz=freq)
+
+    def with_grid(self, n_clusters: int, lanes_per_cluster: int
+                  ) -> "AraXLParams":
+        """Re-factorise the machine as C x L (total lanes = C*L)."""
+        return dataclasses.replace(self, n_lanes=n_clusters * lanes_per_cluster,
+                                   lanes_per_cluster=lanes_per_cluster)
+
+    def with_hierarchy(self, hierarchy: str) -> "AraXLParams":
+        return dataclasses.replace(self, hierarchy=hierarchy)
 
     def with_cuts(self, glsu: int = 0, reqi: int = 0, ringi: int = 0) -> "AraXLParams":
         return dataclasses.replace(self, glsu_regs=glsu, reqi_regs=reqi,
                                    ringi_regs=ringi)
 
 
-def araxl_params(n_lanes: int = 64) -> AraXLParams:
-    return AraXLParams().with_lanes(n_lanes)
+def araxl_params(n_lanes: int = 64, *, lanes_per_cluster: int | None = None,
+                 hierarchy: str | None = None) -> AraXLParams:
+    p = AraXLParams().with_lanes(n_lanes)
+    if lanes_per_cluster is not None:
+        if n_lanes % lanes_per_cluster:
+            raise ValueError(f"lanes_per_cluster ({lanes_per_cluster}) must "
+                             f"divide n_lanes ({n_lanes})")
+        p = p.with_grid(n_lanes // lanes_per_cluster, lanes_per_cluster)
+    if hierarchy is not None:
+        p = p.with_hierarchy(hierarchy)
+    return p
 
 
 def ara2_params(n_lanes: int = 8) -> AraXLParams:
@@ -95,5 +179,5 @@ def ara2_params(n_lanes: int = 8) -> AraXLParams:
         name="ara2", n_lanes=n_lanes, lanes_per_cluster=n_lanes,
         vlen_bits=16384, freq_ghz=1.08,
         vlsu_setup=10.0,              # single-cycle A2A align/shuffle, short path
-        ring_hop=0.0, interlane_lat=2.0,
+        ring_hop=0.0, intra_hop=0.0, interlane_lat=2.0,
     )

@@ -4,12 +4,18 @@ Exposes the same instruction surface but only records
 :class:`repro.core.isa.InstrRecord`s with *real register dependencies*
 (every virtual register / scalar result carries an id), so the pipeline
 model chains exactly the way the hardware would, not by program order.
+
+When constructed with a :class:`repro.topology.Topology`, every slide is
+additionally tagged with the wire level its critical path crosses
+(``meta["level"] = "intra" | "inter"``) so the engine's per-level hop pricing
+and the hierarchy ablations can attribute RINGI traffic to the right wires.
 """
 from __future__ import annotations
 
 import itertools
 
 from repro.core.isa import InstrRecord
+from repro.topology import Topology
 
 
 class _TraceReg:
@@ -37,11 +43,19 @@ def _dep(x):
 class TraceMachine:
     _EXP_FLOPS = 28.0
 
-    def __init__(self, vlen_bits: int = 65536, sew_bits: int = 64):
+    def __init__(self, vlen_bits: int = 65536, sew_bits: int = 64,
+                 topology: Topology | None = None):
         self.vlen_bits = vlen_bits
         self.sew_bits = sew_bits
+        self.topology = topology
         self.trace: list[InstrRecord] = []
         self._ids = itertools.count(1)
+
+    def _slide_meta(self, hops: int) -> dict:
+        meta = {"hops": hops}
+        if self.topology is not None:
+            meta["level"] = self.topology.slide_level(hops)
+        return meta
 
     @property
     def vlmax(self) -> int:
@@ -111,13 +125,16 @@ class TraceMachine:
         return _ScalarResult(rid.id)
 
     def vslide1down(self, a, fill=0.0):
-        return self._rec("vfslide1down", a.vl, "sldu", deps=_dep(a), hops=1)
+        return self._rec("vfslide1down", a.vl, "sldu", deps=_dep(a),
+                         **self._slide_meta(1))
 
     def vslide1up(self, a, fill=0.0):
-        return self._rec("vfslide1up", a.vl, "sldu", deps=_dep(a), hops=1)
+        return self._rec("vfslide1up", a.vl, "sldu", deps=_dep(a),
+                         **self._slide_meta(1))
 
     def vslidedown(self, a, k):
-        return self._rec("vslidedown.vx", a.vl, "sldu", deps=_dep(a), hops=k)
+        return self._rec("vslidedown.vx", a.vl, "sldu", deps=_dep(a),
+                         **self._slide_meta(k))
 
     def vredsum(self, a):
         r = self._rec("vfredsum", a.vl, "redu", 1.0, deps=_dep(a))

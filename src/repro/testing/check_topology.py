@@ -1,0 +1,62 @@
+"""Multi-device check: one shared Topology drives emulator and sim.
+
+For every (C, L) factorisation of the 8-device ring this builds the sim
+params for that grid, hands ``params.topology`` — the *same value* — to
+``repro.core.machine.make_machine``, asserts the machine stores it verbatim
+(``machine.spec.topology == params.topology``), and then runs the GLSU round
+trip, a slide and both reductions under both hierarchies against numpy
+oracles.  This is the acceptance gate that the two stacks can never drift
+apart on geometry again.
+
+Usage: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+       python -m repro.testing.check_topology [n]
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(n: int = 8) -> None:
+    # Configure x64 here, not at import time: the tier-1 import sweep loads
+    # this module in-process, and flipping the global flag there leaks into
+    # later float32 tests (the check itself always runs as a subprocess).
+    jax.config.update("jax_enable_x64", True)
+    from repro.core import make_machine
+    from repro.sim import araxl_params
+    from repro.topology import HIERARCHIES, factorizations
+
+    assert len(jax.devices()) >= n, "need more fake devices"
+    grids = factorizations(n)
+    assert grids, f"n={n} has no power-of-two (C, L) factorisation to check"
+    rng = np.random.default_rng(0)
+
+    for C, L in grids:
+        params = araxl_params(n, lanes_per_cluster=L)
+        assert params.topology.grid == (C, L)
+        for hierarchy in HIERARCHIES:
+            topo = params.with_hierarchy(hierarchy).topology
+            v = make_machine(topology=topo, vlen_bits=4096, dtype=jnp.float64)
+            # one Topology, shared by value across both stacks
+            assert v.spec.topology == topo, (v.spec.topology, topo)
+            assert v.hierarchy == hierarchy
+
+            x = rng.normal(size=n * n * 2)
+            r = v.vle(x)
+            np.testing.assert_array_equal(np.asarray(v.vse(r)), x)
+            np.testing.assert_allclose(float(v.vredsum(r)), x.sum(),
+                                       rtol=1e-12)
+            np.testing.assert_allclose(float(v.vredmax(r)), x.max(), rtol=0)
+            s = np.asarray(v.vse(v.vslide1down(r, fill=-1.0)))
+            np.testing.assert_allclose(s, np.concatenate([x[1:], [-1.0]]))
+        print(f"check_topology C{C}xL{L} ok")
+
+    print(f"check_topology OK (n={n}, grids={grids})")
+
+
+if __name__ == "__main__":
+    argv = [int(a) for a in sys.argv[1:]]
+    main(*argv)

@@ -1,0 +1,220 @@
+"""Topology — the one description of AraXL's machine geometry (§III-B).
+
+AraXL's scalability argument (§III-B.4, §IV) rests on a *hierarchical*
+interconnect: C clusters of L lanes each, where intra-cluster traffic rides
+short wires (log2(L) cheap hops) and only the per-cluster stage ever touches
+the long inter-cluster ring (log2(C) expensive hops).  Before this module the
+repo carried two disconnected copies of that geometry — the emulation layer
+(`repro.core.layout` / `ring` / `glsu`) took ``hierarchy="flat"|"two-level"``
+kwargs while the analytical layer (`repro.sim`) hard-coded a flat ring.
+
+:class:`Topology` is the single shared value: ``repro.sim.AraXLParams``
+composes one (``params.topology``), ``repro.core.machine.make_machine``
+accepts one and stores it on the ``VectorMachineSpec``, and ``launch/`` +
+``benchmarks/run.py`` thread one through the fig6/fig7 scaling surface.  It
+is pure Python (no jax import) so the sim layer stays data-free.
+
+Hop pricing
+-----------
+
+Two wire classes, priced independently:
+
+``intra_hop_lat``  one hop on the intra-cluster interconnect (short wires)
+``inter_hop_lat``  one hop on the inter-cluster ring (RINGI; grows with C)
+
+``hierarchy="flat"`` models the flattened C*L ring AraXL argues against:
+every hop is an inter-class (long-wire) hop.  ``hierarchy="two-level"`` is
+the paper's design: :meth:`hop_cost` prices a link by whether it crosses a
+cluster boundary, and :meth:`slide_cost` prices a k-position slide by its
+critical-path lane (the one that crosses the most boundaries).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+#: the two interconnect models (shared by core.ring, core.glsu, sim.params)
+HIERARCHIES = ("flat", "two-level")
+
+#: wire classes a transfer can ride
+LEVELS = ("intra", "inter")
+
+
+def check_hierarchy(hierarchy: str) -> None:
+    if hierarchy not in HIERARCHIES:
+        raise ValueError(f"hierarchy must be one of {HIERARCHIES}, "
+                         f"got {hierarchy!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """C clusters x L lanes/cluster plus the hierarchy and per-level wire
+    prices.  Equality is by value, so two stacks provably share a topology
+    when their ``Topology`` objects compare equal."""
+
+    n_clusters: int
+    lanes_per_cluster: int
+    hierarchy: str = "two-level"
+    cluster_axis: "str | tuple[str, ...]" = "cluster"
+    lane_axis: "str | tuple[str, ...]" = "lane"
+    intra_hop_lat: float = 2.0        # short-wire hop (cycles)
+    inter_hop_lat: float = 4.0        # inter-cluster ring hop (cycles)
+
+    def __post_init__(self):
+        if self.n_clusters < 1 or self.lanes_per_cluster < 1:
+            raise ValueError(f"need >=1 cluster and >=1 lane/cluster, got "
+                             f"C={self.n_clusters} L={self.lanes_per_cluster}")
+        check_hierarchy(self.hierarchy)
+
+    # -- geometry -----------------------------------------------------------
+    @property
+    def n_lanes(self) -> int:
+        """Total lanes (= flattened ring size = C * L)."""
+        return self.n_clusters * self.lanes_per_cluster
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return (self.n_clusters, self.lanes_per_cluster)
+
+    @property
+    def axis_names(self) -> tuple:
+        return (self.cluster_axis, self.lane_axis)
+
+    def coords(self, p: int) -> tuple[int, int]:
+        """Flattened ring position p (cluster-major, lane-minor) -> (c, l)."""
+        return divmod(p % self.n_lanes, self.lanes_per_cluster)
+
+    def cluster_of(self, p: int) -> int:
+        return self.coords(p)[0]
+
+    def lane_of(self, p: int) -> int:
+        return self.coords(p)[1]
+
+    # -- wire pricing -------------------------------------------------------
+    def link_level(self, p: int) -> str:
+        """Wire class of the ring link p -> p+1: "inter" iff it crosses a
+        cluster boundary (including the wrap link n-1 -> 0)."""
+        return ("inter" if (p + 1) % self.lanes_per_cluster == 0 and
+                self.n_clusters > 1 else "intra")
+
+    def hop_lat(self, level: str) -> float:
+        if level not in LEVELS:
+            raise ValueError(f"level must be one of {LEVELS}, got {level!r}")
+        return self.intra_hop_lat if level == "intra" else self.inter_hop_lat
+
+    def hop_cost(self, src: int, dst: int) -> float:
+        """Cycles for one transfer from ring position ``src`` forward to
+        ``dst`` (sum of link prices along the directed ring path).  Under the
+        flat hierarchy every link is priced as a long-wire ring hop."""
+        n = self.n_lanes
+        steps = (dst - src) % n
+        if self.hierarchy == "flat":
+            return steps * self.inter_hop_lat
+        return sum(self.hop_lat(self.link_level((src + i) % n))
+                   for i in range(steps))
+
+    def slide_crossings(self, hops: int) -> int:
+        """Cluster-boundary crossings on the *critical* lane path of a slide
+        by ``hops`` positions (the completion bound: the slowest lane)."""
+        if self.n_clusters == 1:
+            return 0
+        return min(hops, math.ceil(hops / self.lanes_per_cluster))
+
+    def slide_level(self, hops: int = 1) -> str:
+        """Wire class the critical path of a ``hops``-position slide crosses
+        ("inter" whenever any lane must cross a cluster boundary)."""
+        return "inter" if self.slide_crossings(max(1, hops)) else "intra"
+
+    def slide_cost(self, hops: int) -> float:
+        """Critical-path cycles before a slide by ``hops`` can stream.
+
+        flat:       every hop is a full ring hop -> hops * inter_hop_lat.
+        two-level:  the slowest lane crosses ceil(hops/L) cluster boundaries;
+                    its remaining steps ride the short intra-cluster wires.
+        """
+        hops = max(0, hops)
+        if self.hierarchy == "flat":
+            return hops * self.inter_hop_lat
+        inter = self.slide_crossings(hops)
+        return inter * self.inter_hop_lat + (hops - inter) * self.intra_hop_lat
+
+    @staticmethod
+    def tree_stages(size: int):
+        """Recursive-doubling stage distances 1, 2, 4, ... < size (the
+        §III-B.4 log-tree: stage s rides s ring hops)."""
+        s = 1
+        while s < size:
+            yield s
+            s *= 2
+
+    def tree_wire_cycles(self) -> float:
+        """Pure wire cycles of a full cross-machine log-tree reduction.
+
+        flat:       every stage spans the whole C*L ring at ring-hop price.
+        two-level:  log2(L) stages on intra-cluster wires, then log2(C)
+                    stages on the ring — the long wires never see lane
+                    traffic, which is the paper's physical-scalability claim.
+
+        Note this prices bare wires only; AraXL's *reduction* pipeline runs
+        its intra-cluster stages through the calibrated A2A stage
+        (``AraXLParams.interlane_lat``), so ``red_tree_lat`` consumes this
+        method's ring terms but substitutes its own intra-cluster stage cost.
+        """
+        if self.hierarchy == "flat":
+            return sum(s * self.inter_hop_lat
+                       for s in self.tree_stages(self.n_lanes))
+        intra = sum(s * self.intra_hop_lat
+                    for s in self.tree_stages(self.lanes_per_cluster))
+        inter = sum(s * self.inter_hop_lat
+                    for s in self.tree_stages(self.n_clusters))
+        return intra + inter
+
+    # -- derivation helpers -------------------------------------------------
+    def with_hierarchy(self, hierarchy: str) -> "Topology":
+        return dataclasses.replace(self, hierarchy=hierarchy)
+
+    def with_grid(self, n_clusters: int, lanes_per_cluster: int) -> "Topology":
+        return dataclasses.replace(self, n_clusters=n_clusters,
+                                   lanes_per_cluster=lanes_per_cluster)
+
+    def describe(self) -> dict:
+        """JSON-friendly record (benchmarks / dry-run artifacts)."""
+        return {
+            "n_clusters": self.n_clusters,
+            "lanes_per_cluster": self.lanes_per_cluster,
+            "n_lanes": self.n_lanes,
+            "hierarchy": self.hierarchy,
+            "cluster_axis": self.cluster_axis,
+            "lane_axis": self.lane_axis,
+            "intra_hop_lat": self.intra_hop_lat,
+            "inter_hop_lat": self.inter_hop_lat,
+        }
+
+
+def factorizations(n_lanes: int, power_of_two: bool = True):
+    """All (C, L) grids with C*L == n_lanes — the fig6 factorisation sweep
+    (64 lanes as 16x4 / 8x8 / 4x16 / ...)."""
+    out = []
+    for L in range(1, n_lanes + 1):
+        if n_lanes % L:
+            continue
+        C = n_lanes // L
+        if power_of_two and ((C & (C - 1)) or (L & (L - 1))):
+            continue
+        out.append((C, L))
+    return out
+
+
+def parse_topology(s: str, **kw) -> Topology:
+    """Parse "CxL" or "CxL:hierarchy" (e.g. "16x4:two-level") into a
+    Topology; extra kwargs (axis names, hop prices) pass through."""
+    spec, _, hierarchy = s.partition(":")
+    try:
+        c, _, l = spec.partition("x")
+        C, L = int(c), int(l)
+    except ValueError:
+        raise ValueError(f"topology spec must look like '16x4[:hierarchy]', "
+                         f"got {s!r}") from None
+    if hierarchy:
+        kw["hierarchy"] = hierarchy
+    return Topology(C, L, **kw)

@@ -78,6 +78,38 @@ def test_fdotproduct_long_vector_mitigation():
     assert s > scale_vs_ara2_8("fdotproduct", 512) + 1.0
 
 
+def test_two_level_red_tree_strictly_cheaper_than_flat_at_64():
+    """§III-B.4: the hierarchical interconnect (log2(L) short hops + log2(C)
+    ring hops) must beat the flattened 64-lane ring's log-tree outright —
+    this is the physical-scalability claim the whole design rests on."""
+    p = araxl_params(64)
+    assert p.hierarchy == "two-level"         # the calibrated default
+    assert p.red_tree_lat() < p.with_hierarchy("flat").red_tree_lat()
+
+
+@pytest.mark.parametrize("kernel", ["softmax", "fdotproduct"])
+def test_reduction_kernels_scale_better_under_the_hierarchy(kernel):
+    """The fig6 ablation: at 64 lanes the reduction-bound kernels scale
+    strictly better on the two-level interconnect than on the flat ring
+    (and only the two-level numbers sit in the paper's bands)."""
+    a8 = fpc(kernel, ara2_params(8), 512)
+    s_two = fpc(kernel, araxl_params(64), 512) / a8
+    s_flat = fpc(kernel, araxl_params(64, hierarchy="flat"), 512) / a8
+    assert s_two > s_flat + 0.5, (s_two, s_flat)
+    band = {"softmax": paper.SOFTMAX_SCALE_64L,
+            "fdotproduct": paper.FDOT_SCALE_64L}[kernel]
+    assert s_flat < band * 0.94               # the flat ring misses the paper
+
+
+def test_compute_bound_kernels_insensitive_to_hierarchy():
+    """fmatmul/exp stream through the FPUs; the interconnect model must not
+    move them (no reductions, no slides)."""
+    for kernel in ("fmatmul", "exp"):
+        u_two = util(kernel, araxl_params(64), 512)
+        u_flat = util(kernel, araxl_params(64, hierarchy="flat"), 512)
+        assert u_two == pytest.approx(u_flat, abs=0.005), kernel
+
+
 def test_reduction_latency_is_size_independent():
     """The mechanism behind the softmax/fdot gap: tree latency depends on the
     configuration, not the problem size."""

@@ -1,0 +1,162 @@
+"""Units for the shared Topology abstraction (geometry, per-level hop
+pricing, the flat-vs-two-level tree claim, with_lanes clamping) plus the
+multi-device check that the emulator and the sim provably share one
+Topology value across every 8-device C x L factorisation."""
+import math
+
+import pytest
+
+from repro.sim import AraXLParams, ara2_params, araxl_params, build_trace
+from repro.testing.subproc import run_check
+from repro.topology import (HIERARCHIES, Topology, factorizations,
+                            parse_topology)
+
+
+# ---------------------------------------------------------------------------
+# Geometry + validation
+# ---------------------------------------------------------------------------
+
+def test_topology_geometry():
+    t = Topology(16, 4)
+    assert t.n_lanes == 64 and t.grid == (16, 4)
+    assert t.coords(0) == (0, 0)
+    assert t.coords(5) == (1, 1)          # cluster-major, lane-minor
+    assert t.coords(63) == (15, 3)
+    assert t.cluster_of(63) == 15 and t.lane_of(63) == 3
+
+
+def test_topology_validates():
+    with pytest.raises(ValueError):
+        Topology(0, 4)
+    with pytest.raises(ValueError):
+        Topology(4, 4, hierarchy="three-level")
+    with pytest.raises(ValueError):
+        parse_topology("sixteen-by-four")
+
+
+def test_parse_topology():
+    t = parse_topology("16x4:flat", cluster_axis="data", lane_axis="model")
+    assert t.grid == (16, 4) and t.hierarchy == "flat"
+    assert t.cluster_axis == "data" and t.lane_axis == "model"
+    assert parse_topology("8x8").hierarchy == "two-level"
+
+
+def test_factorizations_of_64():
+    grids = factorizations(64)
+    assert (16, 4) in grids and (8, 8) in grids and (4, 16) in grids
+    assert all(C * L == 64 for C, L in grids)
+
+
+# ---------------------------------------------------------------------------
+# Per-level hop pricing
+# ---------------------------------------------------------------------------
+
+def test_hop_cost_prices_levels_differently():
+    t = Topology(4, 4, intra_hop_lat=2.0, inter_hop_lat=5.0)
+    # links inside a cluster are short wires; the boundary link rides RINGI
+    assert t.hop_cost(0, 1) == 2.0
+    assert t.hop_cost(3, 4) == 5.0        # crosses the cluster boundary
+    assert t.hop_cost(15, 0) == 5.0       # the wrap link
+    assert t.hop_cost(0, 4) == 3 * 2.0 + 5.0
+    # flat hierarchy: every link is a long-wire ring hop
+    f = t.with_hierarchy("flat")
+    assert f.hop_cost(0, 1) == 5.0
+    assert f.hop_cost(0, 4) == 4 * 5.0
+
+
+def test_slide_cost_critical_path():
+    t = Topology(4, 4, intra_hop_lat=2.0, inter_hop_lat=5.0)
+    # slide-by-1 always crosses a boundary somewhere: bound by the ring hop
+    assert t.slide_cost(1) == 5.0
+    assert t.slide_level(1) == "inter"
+    # larger slides: ceil(k/L) crossings, the rest on short wires
+    assert t.slide_cost(6) == 2 * 5.0 + 4 * 2.0
+    assert t.with_hierarchy("flat").slide_cost(6) == 6 * 5.0
+    # single cluster: everything is intra-cluster
+    one = Topology(1, 8, intra_hop_lat=2.0, inter_hop_lat=5.0)
+    assert one.slide_cost(3) == 3 * 2.0
+    assert one.slide_level(1) == "intra"
+
+
+def test_tree_wire_cycles_hierarchy_wins():
+    t = Topology(16, 4, intra_hop_lat=2.0, inter_hop_lat=4.0)
+    assert t.tree_wire_cycles() < t.with_hierarchy("flat").tree_wire_cycles()
+
+
+def test_traces_tag_slide_levels():
+    p = araxl_params(64)
+    slides = [r for r in build_trace("jacobi2d", p, 64) if r.unit == "sldu"]
+    assert slides and all(r.meta["level"] == "inter" for r in slides)
+    slides = [r for r in build_trace("fconv2d", ara2_params(8), 64)
+              if r.unit == "sldu"]
+    assert slides and all(r.meta["level"] == "intra" for r in slides)
+
+
+# ---------------------------------------------------------------------------
+# AraXLParams composes the Topology (and with_lanes is clamped)
+# ---------------------------------------------------------------------------
+
+def test_params_compose_topology():
+    p = araxl_params(64)
+    t = p.topology
+    assert t == Topology(16, 4, hierarchy="two-level",
+                         intra_hop_lat=p.intra_hop, inter_hop_lat=p.hop_lat)
+    # interface register cuts reprice the ring hops through the same type
+    assert p.with_cuts(ringi=1).topology.inter_hop_lat == p.hop_lat + 1
+
+
+def test_with_lanes_clamps_tiny_configs():
+    # seed bug: n_lanes < 4 kept lanes_per_cluster=4, mispricing n_clusters
+    for n in (1, 2):
+        p = araxl_params(n)
+        assert p.lanes_per_cluster == n and p.n_clusters == 1
+    assert araxl_params(2).red_tree_lat() < araxl_params(8).red_tree_lat()
+
+
+def test_constructor_validates_grid():
+    with pytest.raises(ValueError):
+        AraXLParams(n_lanes=6, lanes_per_cluster=4)
+    with pytest.raises(ValueError):
+        araxl_params(64, lanes_per_cluster=5)
+    # with_lanes keeps the grid consistent even for awkward totals
+    p = araxl_params(64).with_lanes(6)
+    assert p.n_lanes % p.lanes_per_cluster == 0
+
+
+@pytest.mark.parametrize("C,L", factorizations(64))
+def test_all_64_lane_factorisations_price_coherently(C, L):
+    p = araxl_params(64, lanes_per_cluster=L)
+    assert p.topology.grid == (C, L) and p.n_lanes == 64
+    flat = p.with_hierarchy("flat")
+    assert p.red_tree_lat() <= flat.red_tree_lat()
+    if L > 1:            # the hierarchy strictly wins once clusters group
+        assert p.red_tree_lat() < flat.red_tree_lat()
+    # the log-tree term is made of the same per-level wire prices
+    assert p.topology.tree_wire_cycles() <= flat.topology.tree_wire_cycles()
+
+
+# ---------------------------------------------------------------------------
+# One Topology shared by emulator and sim
+# ---------------------------------------------------------------------------
+
+def test_machine_and_sim_share_topology_single_device():
+    from repro.core import make_machine
+    p = AraXLParams(n_lanes=1, lanes_per_cluster=1)
+    m = make_machine(topology=p.topology)
+    assert m.spec.topology == p.topology
+    assert m.hierarchy == p.hierarchy == "two-level"
+
+
+def test_make_machine_rejects_conflicting_grid():
+    from repro.core import make_machine
+    with pytest.raises(ValueError):
+        make_machine(2, 4, topology=Topology(1, 1))
+    with pytest.raises(ValueError):
+        make_machine()
+
+
+def test_machine_and_sim_share_topology_8dev_grid():
+    """All (C, L) factorisations of the 8-device ring, both hierarchies,
+    against numpy oracles — in an 8-fake-device subprocess."""
+    out = run_check("repro.testing.check_topology", "8", devices=8)
+    assert "check_topology OK" in out
