@@ -10,6 +10,9 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 
+# Tier-1 pytest (includes tests/test_docs.py, which executes every fenced
+# python block in docs/*.md in an 8-fake-device subprocess — the docs are
+# part of the contract, not prose).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
 # Fast sim-only benchmark smoke: the analytical model (fig7 latency

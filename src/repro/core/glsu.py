@@ -21,12 +21,14 @@ which is a transpose-flavoured all-to-all.  Two implementations:
     ``ppermute`` (a pipelined shift register chain in hardware, a short-range
     ICI hop on TPU).  This is exactly the Align/Shuffle decomposition.
 
-    With ``hierarchy="two-level"`` the Align stage is split along the paper's
-    hierarchy: the low log2(L) rounds are *cluster-local* lane rotations (the
-    short-hop shift registers of §III-B.3), and only the remaining log2(C)
-    rounds — plus a per-lane carry for buckets that wrapped past the cluster
-    boundary — ride the inter-cluster ring.  Same round count, but the
-    physically long wires never carry intra-cluster traffic.
+    With a hierarchical interconnect (``hierarchy="two-level"`` and deeper)
+    the Align stage is split along the topology: the low log2(L) rounds are
+    *cluster-local* lane rotations (the short-hop shift registers of
+    §III-B.3), and only the remaining rounds — plus a per-level carry for
+    buckets that wrapped past a boundary, exactly multi-digit addition —
+    ride the outer rings (log2(C) cluster rounds, then log2(P) pod rounds,
+    ...).  Same total round count, but each level's physically long wires
+    never carry inner-level traffic.
 
 ``mode="direct"`` — one XLA resharding (reshape + sharding constraint): the
     flat all-to-all AraXL argues *against* in hardware; on TPU the XLA
@@ -49,7 +51,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import substrate
 from .layout import VectorLayout, VectorMachineSpec
-from .ring import _resolve_hierarchy, ppermute_shift, ring_pos
+from .ring import (_levels_inner_first, _resolve_hierarchy, ppermute_shift,
+                   ring_pos)
 
 
 # ---------------------------------------------------------------------------
@@ -90,48 +93,51 @@ def _route_buckets(buf: jax.Array, axis_names: Sequence[str], n: int) -> jax.Arr
     return buf
 
 
+def _route_buckets_hier(buf: jax.Array, levels: Sequence, n: int) -> jax.Array:
+    """N-level Align: route bucket o exactly o flattened-ring positions
+    forward, walking ``levels`` (innermost-first (axes, size) pairs) with
+    per-level power-of-2 rotations — exactly multi-digit addition of the
+    offset o to the device coordinate, carries included.
+
+    At each level the bucket rotates by its offset digit plus the carry
+    from the level below; a bucket wrapped past this level's boundary
+    (detectable at the *destination* coordinate x' as x' < rot, or as a
+    full-cycle rotation) carries +1 into the level above.  Same
+    post-condition as the flat schedule: slot o on device d holds the
+    bucket that originated at device (d - o) mod n.
+    """
+    o = jnp.arange(n)
+    bshape = (n,) + (1,) * (buf.ndim - 1)
+    carry = jnp.zeros(n, o.dtype)
+    stride = 1
+    for j, (axes, size) in enumerate(levels):
+        assert size & (size - 1) == 0, \
+            "hierarchical staged GLSU requires power-of-2 level sizes"
+        digit = (o // stride) % size
+        hops = digit + carry                          # in [0, size]
+        rot = hops % size
+        k = 0
+        while (1 << k) < size:
+            step = 1 << k
+            moved = ppermute_shift(buf, axes, -step, size)
+            take = ((rot >> k) & 1).astype(bool)
+            buf = jnp.where(take.reshape(bshape), moved, buf)
+            k += 1
+        if j < len(levels) - 1:
+            here = ring_pos(axes)
+            carry = ((here < rot) | (hops >= size)).astype(o.dtype)
+        stride *= size
+    return buf
+
+
 def _route_buckets_two_level(buf: jax.Array, cluster_axes: Sequence[str],
                              C: int, lane_axes: Sequence[str], L: int
                              ) -> jax.Array:
-    """Two-level Align: route bucket o exactly o flattened-ring positions
-    forward using log2(L) cluster-local lane rotations followed by log2(C)
-    inter-cluster ring rotations.
-
-    A bucket with offset o lands on lane (l + o) mod L of cluster
-    c + o//L + carry, where carry = 1 iff the lane rotation wrapped past the
-    cluster boundary (detectable at the *destination* lane l' as
-    l' < o mod L).  Same post-condition as the flat schedule: slot o on
-    device d holds the bucket that originated at device (d - o) mod n.
-    """
-    n = C * L
-    assert C & (C - 1) == 0 and L & (L - 1) == 0, \
-        "two-level staged GLSU requires power-of-2 cluster and lane counts"
-    o = jnp.arange(n)
-    bshape = (n,) + (1,) * (buf.ndim - 1)
-
-    # Align short-hops: intra-cluster lane rotation by o mod L.
-    o_lane = o % L
-    k = 0
-    while (1 << k) < L:
-        step = 1 << k
-        moved = ppermute_shift(buf, lane_axes, -step, L)
-        take = ((o_lane >> k) & 1).astype(bool)
-        buf = jnp.where(take.reshape(bshape), moved, buf)
-        k += 1
-
-    # Inter-cluster rounds: o//L hops, +1 for buckets whose lane rotation
-    # wrapped (their current lane l' satisfies l' < o mod L).
-    lane_here = ring_pos(lane_axes)
-    carry = (lane_here < o_lane).astype(o.dtype)
-    hops = (o // L + carry) % C
-    k = 0
-    while (1 << k) < C:
-        step = 1 << k
-        moved = ppermute_shift(buf, cluster_axes, -step, C)
-        take = ((hops >> k) & 1).astype(bool)
-        buf = jnp.where(take.reshape(bshape), moved, buf)
-        k += 1
-    return buf
+    """The two-level special case of :func:`_route_buckets_hier`: log2(L)
+    cluster-local lane rotations, then log2(C) inter-cluster ring rotations
+    (+1 hop for buckets whose lane rotation wrapped the cluster boundary)."""
+    return _route_buckets_hier(
+        buf, [(tuple(lane_axes), L), (tuple(cluster_axes), C)], C * L)
 
 
 def n_staged_rounds(n: int) -> int:
@@ -149,14 +155,15 @@ def n_staged_rounds(n: int) -> int:
 # ---------------------------------------------------------------------------
 
 def _make_router(spec: VectorMachineSpec, hierarchy: str | None):
-    """The Align-stage routing schedule for ``spec`` (flat or two-level;
-    None takes the hierarchy of the spec's shared Topology)."""
+    """The Align-stage routing schedule for ``spec`` (flat, or hierarchical
+    walking every topology level; None takes the hierarchy of the spec's
+    shared Topology)."""
     hierarchy = _resolve_hierarchy(spec, hierarchy)
-    if hierarchy == "two-level":
-        return lambda buf: _route_buckets_two_level(
-            buf, spec.cluster_axes, spec.n_clusters,
-            spec.lane_axes, spec.n_lanes)
-    return lambda buf: _route_buckets(buf, spec.ring_axes, spec.n_total_lanes)
+    if hierarchy == "flat":
+        return lambda buf: _route_buckets(buf, spec.ring_axes,
+                                          spec.n_total_lanes)
+    return lambda buf: _route_buckets_hier(buf, _levels_inner_first(spec),
+                                           spec.n_total_lanes)
 
 
 def _mem_to_reg_local(xloc: jax.Array, axis_names: Sequence[str], n: int,

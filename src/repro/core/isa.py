@@ -49,9 +49,10 @@ class AraXLMachine:
 
     ``glsu_mode`` / ``reduce_mode`` select paper-faithful staged/ring
     implementations vs flat XLA collectives (the §Perf ablation switch);
-    ``hierarchy`` ("flat" | "two-level") picks the flattened lane ring or the
-    paper's intra-cluster/inter-cluster two-level interconnect for both the
-    staged GLSU Align network and the RINGI reductions — defaulting to the
+    ``hierarchy`` ("flat", or the spec's depth spelled out: "two-level",
+    "three-level", ...) picks the flattened lane ring or the paper's
+    per-level interconnect — one ring per topology level — for both the
+    staged GLSU Align network and the RINGI reductions, defaulting to the
     hierarchy of the spec's shared :class:`repro.topology.Topology`.
     """
 

@@ -62,7 +62,10 @@ class VectorMachineSpec:
     derived from the mesh (flat hierarchy, the emulator's historical
     default); when given, its grid must match the mesh axis sizes, and
     ``repro.core.ring`` / ``repro.core.glsu`` take their default hierarchy
-    from it.
+    from it.  For topologies deeper than two levels (pod / cluster / lane)
+    ``cluster_axis`` carries every non-lane level as a tuple and
+    :meth:`topology_levels` exposes the per-level (axes, size) split the
+    hierarchical collectives walk.
     """
 
     mesh: Mesh
@@ -108,6 +111,13 @@ class VectorMachineSpec:
     def lane_axes(self) -> tuple[str, ...]:
         """The intra-cluster lane axes (hierarchy level 1) as a tuple."""
         return _axis_tuple(self.lane_axis)
+
+    def topology_levels(self) -> tuple:
+        """Per-level (mesh-axes tuple, size) pairs, outermost first, from
+        the shared Topology — what the N-level collectives in
+        ``repro.core.ring`` / ``repro.core.glsu`` walk."""
+        return tuple((_axis_tuple(l.axis), l.size)
+                     for l in self.topology.levels)
 
     @property
     def ring_axes(self) -> tuple[str, ...]:

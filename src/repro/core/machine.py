@@ -1,12 +1,14 @@
 """Machine construction helpers (the REQI view: one program, many clusters).
 
 ``make_machine`` is topology-first: pass a :class:`repro.topology.Topology`
-(e.g. ``repro.sim.araxl_params(8).topology``) and the mesh axes, cluster/lane
-grid, and interconnect hierarchy are all derived from it — the emulator and
-the analytical cost model then provably share one geometry value
-(``machine.spec.topology == params.topology``).  The legacy
-``make_machine(C, L, hierarchy=...)`` form still works and builds the
-equivalent Topology internally.
+(e.g. ``repro.sim.araxl_params(8).topology``) and the mesh axes, level grid,
+and interconnect hierarchy are all derived from it — the emulator and the
+analytical cost model then provably share one geometry value
+(``machine.spec.topology == params.topology``).  The mesh gets **one axis
+per topology level** (outermost first), so a three-level (pod, cluster,
+lane) topology builds a (P, C, L) mesh whose non-lane axes ride the spec's
+``cluster_axis`` tuple.  The legacy ``make_machine(C, L, hierarchy=...)``
+form still works and builds the equivalent two-level Topology internally.
 """
 from __future__ import annotations
 
@@ -23,6 +25,17 @@ def make_vector_mesh(n_clusters: int, n_lanes: int,
                      lane_axis: str = "lane") -> Mesh:
     """A (C, L) mesh over however many devices exist (C*L must divide in)."""
     return jax.make_mesh((n_clusters, n_lanes), (cluster_axis, lane_axis))
+
+
+def make_topology_mesh(topology: Topology) -> Mesh:
+    """One mesh axis per topology level, outermost first."""
+    names = []
+    for l in topology.levels:
+        if not isinstance(l.axis, str):
+            raise ValueError(f"make_machine needs single-name level axes, "
+                             f"got {l.axis!r}")
+        names.append(l.axis)
+    return jax.make_mesh(topology.shape, tuple(names))
 
 
 def make_machine(n_clusters: int | None = None, n_lanes: int | None = None,
@@ -45,11 +58,7 @@ def make_machine(n_clusters: int | None = None, n_lanes: int | None = None,
                              f"{topology.grid}")
         if hierarchy is not None:
             topology = topology.with_hierarchy(hierarchy)
-    if not (isinstance(topology.cluster_axis, str)
-            and isinstance(topology.lane_axis, str)):
-        raise ValueError("make_machine needs single-name topology axes")
-    mesh = make_vector_mesh(topology.n_clusters, topology.lanes_per_cluster,
-                            topology.cluster_axis, topology.lane_axis)
+    mesh = make_topology_mesh(topology)
     spec = VectorMachineSpec(mesh, topology.cluster_axis, topology.lane_axis,
                              vlen_bits, sew_bits, topology=topology)
     return AraXLMachine(spec, glsu_mode=glsu_mode, reduce_mode=reduce_mode,

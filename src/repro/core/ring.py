@@ -11,16 +11,20 @@ the hierarchy of the spec's shared :class:`repro.topology.Topology` — the
 same geometry type ``repro.sim.AraXLParams`` composes, so the emulator and
 the analytical cost model always describe the same interconnect):
 
-``"flat"``       the flattened ring of all n = C·L lanes (cluster-major,
-                 lane-minor — the same order as the element striping): every
-                 collective is log2(n) or n-1 hops on one ring.
+``"flat"``       the flattened ring of all n lanes (outer-major — the same
+                 order as the element striping): every collective is
+                 log2(n) or n-1 hops on one ring.
 
 ``"two-level"``  the paper's hierarchy (§III-B.4): collectives run first over
-                 the *lane* axis inside each cluster (log2(L) short hops on
+(and deeper)     the *lane* axis inside each cluster (log2(L) short hops on
                  the intra-cluster interconnect), then over the *cluster*
                  axis on the inter-cluster ring (log2(C) hops).  This is the
                  structure AraXL argues makes the design physically scalable:
-                 the long wires only ever carry the per-cluster stage.
+                 the long wires only ever carry the per-cluster stage — and
+                 it recurses: the ``*_hier`` walkers run one ring per
+                 topology level, so a (pod, cluster, lane) machine adds a
+                 log2(P) pod stage whose wires never see cluster traffic
+                 (``"three-level"`` and beyond, named by depth).
 
 Either way a full reduction is the paper's 4-stage pipeline:
 
@@ -52,11 +56,19 @@ MODES = ("ring", "xla")
 
 
 def _resolve_hierarchy(spec: VectorMachineSpec, hierarchy: str | None) -> str:
-    """None -> the hierarchy of the spec's shared Topology."""
+    """None -> the hierarchy of the spec's shared Topology; explicit strings
+    must be "flat" or spell the spec's own depth (e.g. "two-level" on a
+    (C, L) spec, "three-level" on (P, C, L))."""
     if hierarchy is None:
         return spec.topology.hierarchy
-    _check_hierarchy(hierarchy)
+    _check_hierarchy(hierarchy, spec.topology.n_levels)
     return hierarchy
+
+
+def _levels_inner_first(spec: VectorMachineSpec) -> list:
+    """The spec's topology levels as (mesh-axes, size) pairs, innermost
+    first — the walk order of the hierarchical collectives."""
+    return list(reversed(spec.topology_levels()))
 
 
 def _check_mode(mode: str) -> None:
@@ -189,21 +201,31 @@ def reduce_to_scalar_local(col: jax.Array, axis_names: Sequence[str], n: int,
     return ring_allreduce_local(local_red(col), axis_names, n, comb)
 
 
+def reduce_to_scalar_local_hier(col: jax.Array, levels: Sequence,
+                                op: str = "sum") -> jax.Array:
+    """§III-B.4 hierarchical reduction, one ring per topology level:
+    intra-lane first, then log-tree all-reduces walking ``levels``
+    (innermost-first (axes, size) pairs) outward — log2(L) short hops, then
+    log2(C) ring hops, then log2(P) pod hops, ...
+
+    Same result as the flat reduction, but no stage ever spans more than one
+    hierarchy level — the wires that scale with the machine never see the
+    inner levels' traffic.
+    """
+    local_red, comb = _reduce_fns(op)
+    total = local_red(col)
+    for axes, size in levels:
+        total = ring_allreduce_local(total, axes, size, comb)
+    return total
+
+
 def reduce_to_scalar_local_two_level(col: jax.Array,
                                      cluster_axes: Sequence[str], C: int,
                                      lane_axes: Sequence[str], L: int,
                                      op: str = "sum") -> jax.Array:
-    """§III-B.4 hierarchical reduction: intra-lane, then log2(L) hops on the
-    intra-cluster interconnect, then log2(C) hops on the inter-cluster ring.
-
-    Same result as the flat reduction, but no stage ever spans more than one
-    hierarchy level — the wires that scale with C never see the lane traffic.
-    """
-    local_red, comb = _reduce_fns(op)
-    total = local_red(col)
-    total = ring_allreduce_local(total, lane_axes, L, comb)      # inter-lane
-    total = ring_allreduce_local(total, cluster_axes, C, comb)   # inter-cluster
-    return total
+    """The two-level special case of :func:`reduce_to_scalar_local_hier`."""
+    return reduce_to_scalar_local_hier(
+        col, [(tuple(lane_axes), L), (tuple(cluster_axes), C)], op)
 
 
 # -- ring all-gather / reduce-scatter (GLSU staging + FSDP overlap) -----------
@@ -228,16 +250,24 @@ def ring_allgather_local(x: jax.Array, axis_names: Sequence[str], n: int) -> jax
     return stacked.reshape((n * x.shape[0],) + x.shape[1:])
 
 
+def ring_allgather_local_hier(x: jax.Array, levels: Sequence) -> jax.Array:
+    """Hierarchical all-gather walking ``levels`` (innermost-first (axes,
+    size) pairs): L-1 intra-cluster hops assemble each cluster's lane blocks
+    (lane-minor order), then C-1 ring hops exchange whole cluster blocks,
+    then P-1 pod hops exchange whole pod blocks, ... — together exactly the
+    flattened outer-major ring order, with only aggregated payloads on each
+    level's longer wires."""
+    for axes, size in levels:
+        x = ring_allgather_local(x, axes, size)
+    return x
+
+
 def ring_allgather_local_two_level(x: jax.Array,
                                    cluster_axes: Sequence[str], C: int,
                                    lane_axes: Sequence[str], L: int) -> jax.Array:
-    """Hierarchical all-gather: L-1 intra-cluster hops assemble the cluster's
-    lane blocks (lane-minor order), then C-1 inter-cluster ring hops exchange
-    whole cluster blocks (cluster-major order) — together exactly the
-    flattened ring order p = c*L + l, with only cluster-sized payloads on the
-    long wires."""
-    intra = ring_allgather_local(x, lane_axes, L)
-    return ring_allgather_local(intra, cluster_axes, C)
+    """The two-level special case of :func:`ring_allgather_local_hier`."""
+    return ring_allgather_local_hier(
+        x, [(tuple(lane_axes), L), (tuple(cluster_axes), C)])
 
 
 def ring_reduce_scatter_local(x: jax.Array, axis_names: Sequence[str], n: int) -> jax.Array:
@@ -257,18 +287,25 @@ def ring_reduce_scatter_local(x: jax.Array, axis_names: Sequence[str], n: int) -
     return acc                                        # fully-summed chunk p
 
 
+def ring_reduce_scatter_local_hier(x: jax.Array, levels: Sequence) -> jax.Array:
+    """Hierarchical reduce-scatter walking ``levels`` (innermost-first
+    (axes, size) pairs) from the *outside in*: first the outermost ring
+    reduce-scatters its superchunks (each device keeps its outer-coordinate
+    superchunk, partially summed at fixed inner coordinates), then each
+    inner level splits its level's chunk further.  Device p ends with chunk
+    p of the total — identical placement to the flat schedule."""
+    for axes, size in reversed(list(levels)):
+        x = ring_reduce_scatter_local(x, axes, size)
+    return x
+
+
 def ring_reduce_scatter_local_two_level(x: jax.Array,
                                         cluster_axes: Sequence[str], C: int,
                                         lane_axes: Sequence[str], L: int
                                         ) -> jax.Array:
-    """Hierarchical reduce-scatter: first C-1 inter-cluster hops reduce-scatter
-    the C superchunks across the cluster ring (device (c, l) keeps superchunk
-    c, partially summed over clusters at fixed lane l), then L-1 intra-cluster
-    hops finish the sum and scatter the superchunk over the lanes.  Device
-    (c, l) ends with chunk p = c*L + l of the total — identical placement to
-    the flat schedule."""
-    part = ring_reduce_scatter_local(x, cluster_axes, C)
-    return ring_reduce_scatter_local(part, lane_axes, L)
+    """The two-level special case of :func:`ring_reduce_scatter_local_hier`."""
+    return ring_reduce_scatter_local_hier(
+        x, [(tuple(lane_axes), L), (tuple(cluster_axes), C)])
 
 
 # ---------------------------------------------------------------------------
@@ -316,8 +353,8 @@ def reduce_scalar(spec: VectorMachineSpec, data: jax.Array, op: str = "sum",
     """Full-register reduction. mode='ring' is the paper-faithful log-tree on
     neighbour hops; mode='xla' lets XLA pick (flat all-reduce) — the §Perf
     comparison point.  With mode='ring', ``hierarchy`` selects the flattened
-    ring or the paper's two-level intra-cluster/inter-cluster pipeline
-    (default: the spec's Topology hierarchy)."""
+    ring or the paper's per-level pipeline walking every topology level from
+    the lanes outward (default: the spec's Topology hierarchy)."""
     _check_mode(mode)
     hierarchy = _resolve_hierarchy(spec, hierarchy)
     axes, n = spec.ring_axes, spec.n_total_lanes
@@ -329,12 +366,11 @@ def reduce_scalar(spec: VectorMachineSpec, data: jax.Array, op: str = "sum",
 
     def fn(x):
         col = _local_col(x)
-        if hierarchy == "two-level":
-            r = reduce_to_scalar_local_two_level(
-                col, spec.cluster_axes, spec.n_clusters,
-                spec.lane_axes, spec.n_lanes, op)
-        else:
+        if hierarchy == "flat":
             r = reduce_to_scalar_local(col, axes, n, op)
+        else:
+            r = reduce_to_scalar_local_hier(col, _levels_inner_first(spec),
+                                            op)
         return r.reshape(1, 1, 1)
 
     out = substrate.shard_map(fn, mesh=spec.mesh, in_specs=(reg,),
@@ -361,12 +397,10 @@ def ring_allgather(spec: VectorMachineSpec, data: jax.Array,
         col = x[0]
         if mode == "xla":
             full = substrate.all_gather(col, axes, axis=0, tiled=True)
-        elif hierarchy == "two-level":
-            full = ring_allgather_local_two_level(
-                col, spec.cluster_axes, spec.n_clusters,
-                spec.lane_axes, spec.n_lanes)
-        else:
+        elif hierarchy == "flat":
             full = ring_allgather_local(col, axes, n)
+        else:
+            full = ring_allgather_local_hier(col, _levels_inner_first(spec))
         return full[None]
 
     return substrate.shard_map(fn, mesh=spec.mesh, in_specs=(in_spec,),
@@ -394,12 +428,11 @@ def ring_reduce_scatter(spec: VectorMachineSpec, data: jax.Array,
         if mode == "xla":
             out = substrate.psum_scatter(col, axes, scatter_dimension=0,
                                          tiled=True)
-        elif hierarchy == "two-level":
-            out = ring_reduce_scatter_local_two_level(
-                col, spec.cluster_axes, spec.n_clusters,
-                spec.lane_axes, spec.n_lanes)
-        else:
+        elif hierarchy == "flat":
             out = ring_reduce_scatter_local(col, axes, n)
+        else:
+            out = ring_reduce_scatter_local_hier(col,
+                                                 _levels_inner_first(spec))
         return out[None]
 
     return substrate.shard_map(fn, mesh=spec.mesh, in_specs=(in_spec,),

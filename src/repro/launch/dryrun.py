@@ -15,10 +15,12 @@ Usage:
   python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
   python -m repro.launch.dryrun --all --mesh both --out results/dryrun
   python -m repro.launch.dryrun --arch llama3-8b --topology 32x8:two-level
+  python -m repro.launch.dryrun --arch llama3-8b --topology 2x16x8
 
-``--topology CxL[:hierarchy]`` overrides the production mesh with an explicit
-cluster x lane grid (clusters on the `data` axis, lanes on `model`) — the
-same :class:`repro.topology.Topology` value the sim layer prices, so the
+``--topology [Px]CxL[:hierarchy]`` overrides the production mesh with an
+explicit topology (clusters on the `data` axis, lanes on `model`; a third
+leading size adds the outermost `pod` ring level) — the same
+:class:`repro.topology.Topology` value the sim layer prices, so the
 fig6/fig7 factorisation sweeps and the compile surface stay in lock-step.
 """
 # The VERY FIRST lines — before ANY other import (jax locks device count on
@@ -41,9 +43,9 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config, list_archs
 from repro.configs.base import ModelConfig, ShapeSpec
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import (make_production_mesh, parse_launch_topology,
+                               topology_tag)
 from repro.launch.specs import input_shardings, input_specs
-from repro.topology import parse_topology
 from repro.models import lm
 from repro.parallel.sharding import (abstract_params, default_rules,
                                      param_shardings)
@@ -255,9 +257,12 @@ def main():
     ap.add_argument("--shape", action="append", default=None)
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="single")
-    ap.add_argument("--topology", default=None, metavar="CxL[:hierarchy]",
-                    help="override the mesh with an explicit Topology grid "
-                         "(clusters on `data`, lanes on `model`)")
+    ap.add_argument("--topology", default=None,
+                    metavar="[P x]CxL[:hierarchy]",
+                    help="override the mesh with an explicit Topology "
+                         "(clusters on `data`, lanes on `model`; a third "
+                         "leading size adds the `pod` ring level, e.g. "
+                         "2x16x8:three-level)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
@@ -272,11 +277,9 @@ def main():
         if args.mesh != "single":
             ap.error("--topology replaces the pod mesh entirely; drop "
                      "--mesh (or run the pod meshes in a separate invocation)")
-        topo = parse_topology(args.topology, cluster_axis="data",
-                              lane_axis="model")
+        topo = parse_launch_topology(args.topology)
         mesh_plan = [(make_production_mesh(topology=topo),
-                      f"topo{topo.n_clusters}x{topo.lanes_per_cluster}-"
-                      f"{topo.hierarchy}")]
+                      topology_tag(topo))]
     else:
         meshes = {"single": [False], "multi": [True],
                   "both": [False, True]}[args.mesh]

@@ -33,9 +33,10 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config
 from repro.launch import dryrun as dr
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import (make_production_mesh, parse_launch_topology,
+                               topology_tag)
 from repro.parallel.sharding import ShardingRules, default_rules
-from repro.topology import Topology, parse_topology
+from repro.topology import Topology
 
 
 def _fsdp_pure_rules(mesh, cfg, shape):
@@ -82,8 +83,7 @@ def analyse(arch: str, shape_name: str, strategy: str, multi: bool = False,
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi, topology=topology)
-    mname = (f"topo{topology.n_clusters}x{topology.lanes_per_cluster}-"
-             f"{topology.hierarchy}" if topology is not None else
+    mname = (topology_tag(topology) if topology is not None else
              "pod2x16x16" if multi else "pod16x16")
     cfg, rules_override, nm_override = apply_strategy(strategy, cfg, shape,
                                                       mesh)
@@ -114,16 +114,16 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
     ap.add_argument("--strategy", action="append", required=True)
-    ap.add_argument("--topology", default=None, metavar="CxL[:hierarchy]",
-                    help="override the mesh with an explicit Topology grid "
-                         "(clusters on `data`, lanes on `model`)")
+    ap.add_argument("--topology", default=None,
+                    metavar="[P x]CxL[:hierarchy]",
+                    help="override the mesh with an explicit Topology "
+                         "(clusters on `data`, lanes on `model`; a third "
+                         "leading size adds the `pod` ring level)")
     ap.add_argument("--out", default="results/perf")
     args = ap.parse_args()
-    topo = (parse_topology(args.topology, cluster_axis="data",
-                           lane_axis="model")
+    topo = (parse_launch_topology(args.topology)
             if args.topology is not None else None)
-    tsuffix = (f"__topo{topo.n_clusters}x{topo.lanes_per_cluster}-"
-               f"{topo.hierarchy}" if topo is not None else "")
+    tsuffix = f"__{topology_tag(topo)}" if topo is not None else ""
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     for strat in args.strategy:

@@ -376,12 +376,31 @@ def moe_defs_tp(cfg: ModelConfig) -> dict:
     }
 
 
+def _model_axes(rules: ShardingRules) -> tuple:
+    """Mesh axes the logical `model` (TP/EP) axis maps to, flattened.  A
+    plain production mesh gives ("model",); a Topology-driven hierarchical
+    mesh may map `model` to several level axes (e.g. ("pod", "data",
+    "model")) treated as one outer-major expert ring."""
+    if rules.mesh is None:
+        return ()
+    ax = rules.axis("model")
+    if ax is None:
+        return ()
+    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+    return tuple(a for a in axes if a in rules.mesh.shape)
+
+
+def _model_size(rules: ShardingRules) -> int:
+    return math.prod(rules.mesh.shape[a] for a in _model_axes(rules))
+
+
 def moe_mode(cfg: ModelConfig, rules: ShardingRules) -> str:
-    if rules.mesh is None or "model" not in rules.mesh.shape:
+    maxes = _model_axes(rules)
+    if not maxes:
         return "local"
     if cfg.moe_tp:
         return "tp"
-    msize = rules.mesh.shape["model"]
+    msize = _model_size(rules)
     assert cfg.n_experts % msize == 0, \
         f"{cfg.name}: E={cfg.n_experts} not divisible by model={msize}; " \
         "set moe_tp=True"
@@ -418,11 +437,17 @@ def _dispatch_ffn(xf, top_idx, top_gate, wi, wg, wo, e_base, E_loc, C):
     return out
 
 
-def moe_layer(p, x, cfg: ModelConfig, rules: ShardingRules):
+def moe_layer(p, x, cfg: ModelConfig, rules: ShardingRules, topology=None):
     """Top-k MoE with per-shard capacity.  EP mode: experts sharded over
-    `model` via shard_map (tokens replicated on the model axis — the GLSU
-    "shuffle stage" becomes a local scatter + cross-lane psum combine).
-    TP mode (n_experts < |model|): all experts everywhere, ff dim sharded.
+    the `model` axes via shard_map (tokens replicated on the model axes —
+    the GLSU "shuffle stage" becomes a local scatter + cross-lane psum
+    combine).  TP mode (n_experts < |model|): all experts everywhere, ff
+    dim sharded.
+
+    ``topology`` (a :class:`repro.topology.Topology` whose level axes are
+    the `model` mesh axes) makes the ep_a2a dispatch hierarchical: the
+    token all-to-all runs level by level, intra-level ring first — see
+    :func:`_moe_ep_a2a`.
     """
     B, S, d = x.shape
     xn = rmsnorm(x, p["norm"], cfg.norm_eps)
@@ -446,50 +471,102 @@ def moe_layer(p, x, cfg: ModelConfig, rules: ShardingRules):
         return x + y.astype(x.dtype)
 
     mesh = rules.mesh
-    msize = mesh.shape["model"]
+    maxes = _model_axes(rules)
+    msize = _model_size(rules)
+    mspec = maxes if len(maxes) > 1 else maxes[0]
     bspec = rules.spec(("batch", "", ""))   # respects batch divisibility
 
     if mode == "tp":
         # every shard runs all experts on its token shard, ff sharded
         def body(xn_, ti_, tg_, wi, wg, wo):
             y = run_local(xn_, ti_, tg_, wi, wg, wo, 0, E)
-            return jax.lax.psum(y, "model")
+            return jax.lax.psum(y, maxes)
 
         y = substrate.shard_map(
             body, mesh=mesh,
             in_specs=(bspec, bspec, bspec,
-                      P(None, None, "model"), P(None, None, "model"),
-                      P(None, "model", None)),
+                      P(None, None, mspec), P(None, None, mspec),
+                      P(None, mspec, None)),
             out_specs=bspec)(xn, top_idx, top_gate, p["wi"], p["wg"], p["wo"])
         return x + y.astype(x.dtype)
 
     if mode == "ep_a2a" and S % msize == 0:
-        return x + _moe_ep_a2a(p, xn, top_idx, top_gate, cfg, rules
-                               ).astype(x.dtype)
+        return x + _moe_ep_a2a(p, xn, top_idx, top_gate, cfg, rules,
+                               topology).astype(x.dtype)
 
-    # EP (replicated-token variant): experts sharded over `model`, tokens
-    # replicated on the model axis, combine via psum.  Simple but pays a
+    # EP (replicated-token variant): experts sharded over the model axes,
+    # tokens replicated on them, combine via psum.  Simple but pays a
     # token-space all-reduce per layer — §Perf replaces it with ep_a2a.
     E_loc = E // msize
 
     def body(xn_, ti_, tg_, wi, wg, wo):
-        e_base = jax.lax.axis_index("model") * E_loc
+        e_base = substrate.axis_index(maxes) * E_loc
         # e_base is traced; shift indices so the static loop sees local ids
         ti_loc = ti_ - e_base
         y = run_local(xn_, ti_loc, tg_, wi, wg, wo, 0, E_loc)
-        return jax.lax.psum(y, "model")
+        return jax.lax.psum(y, maxes)
 
     y = substrate.shard_map(
         body, mesh=mesh,
         in_specs=(bspec, bspec, bspec,
-                  P("model", None, None), P("model", None, None),
-                  P("model", None, None)),
+                  P(mspec, None, None), P(mspec, None, None),
+                  P(mspec, None, None)),
         out_specs=bspec)(xn, top_idx, top_gate, p["wi"], p["wg"], p["wo"])
     return x + y.astype(x.dtype)
 
 
+def _a2a_stages(rules: ShardingRules, topology) -> list:
+    """The expert-dispatch exchange as (axes, size) stages, innermost
+    first.
+
+    Flat (``topology=None``): one all-to-all over every model axis at once.
+    With a Topology whose level axes are the model axes, one stage per
+    level — the intra-level (lane) exchange runs first and each outer
+    (cluster / pod) stage only moves already-aggregated level blocks, so
+    the physically long wires never carry intra-level traffic (the
+    §III-B.3 Align pipeline applied to token buffers).  Both schedules are
+    exact inverses of themselves stage by stage, so the combine path
+    restores placement bit-identically to the flat exchange.
+    """
+    maxes = _model_axes(rules)
+    if topology is None:
+        return [(maxes, _model_size(rules))]
+    from repro.topology import mesh_levels
+    levels = mesh_levels(topology, rules.mesh.shape)
+    flat = tuple(a for axes, _ in levels for a in axes)
+    if flat != maxes:
+        raise ValueError(f"topology level axes {flat} must flatten to the "
+                         f"model axes {maxes}")
+    return list(reversed(levels))                     # innermost first
+
+
+def _a2a_dispatch(buf, stages, E_loc: int):
+    """(E, C, d) expert-major capacity buffers -> (E_loc, C*msize, d): every
+    stage peels off the expert index's innermost remaining level digit and
+    exchanges along that level's ring."""
+    for axes, s in stages:
+        ED, Ccur, d = buf.shape
+        buf = buf.reshape(ED // (s * E_loc), s, E_loc, Ccur, d)
+        buf = jax.lax.all_to_all(buf, axes, split_axis=1, concat_axis=3,
+                                 tiled=True)
+        buf = buf.reshape(ED // s, Ccur * s, d)
+    return buf
+
+
+def _a2a_combine(y, stages, E_loc: int):
+    """Exact inverse of :func:`_a2a_dispatch` (stages unwound outermost
+    first), restoring (E, C, d) placement."""
+    for axes, s in reversed(stages):
+        ED, Ccur, d = y.shape
+        y = y.reshape(ED // E_loc, 1, E_loc, Ccur, d)
+        y = jax.lax.all_to_all(y, axes, split_axis=3, concat_axis=1,
+                               tiled=True)
+        y = y.reshape(ED * s, Ccur // s, d)
+    return y
+
+
 def _moe_ep_a2a(p, xn, top_idx, top_gate, cfg: ModelConfig,
-                rules: ShardingRules):
+                rules: ShardingRules, topology=None):
     """All-to-all expert parallelism — the GLSU discipline: shuffle the
     (small) token buffers between expert shards instead of replicating
     tokens / gathering weights.
@@ -499,9 +576,19 @@ def _moe_ep_a2a(p, xn, top_idx, top_gate, cfg: ModelConfig,
     shard i holds its E/msize experts' tokens from every source, runs the
     FFN, a2a's back and combines.  Wire per layer ~= 4 x dispatched-token
     bytes — two orders of magnitude below the psum-combine variant at
-    qwen3 scale (measured in §Perf)."""
+    qwen3 scale (measured in §Perf).
+
+    Communicates across: every `model` mesh axis.  Flat by default (one
+    all-to-all spanning them); with ``topology`` the exchange walks the
+    topology levels innermost-first (see :func:`_a2a_stages`) and — because
+    the FFN is row-independent and the combine inverts the dispatch stage
+    by stage — produces bit-identical results to the flat exchange.
+    """
     mesh = rules.mesh
-    msize = mesh.shape["model"]
+    maxes = _model_axes(rules)
+    msize = _model_size(rules)
+    mspec = maxes if len(maxes) > 1 else maxes[0]
+    stages = _a2a_stages(rules, topology)
     B, S, d = xn.shape
     E, k = cfg.n_experts, cfg.experts_per_token
     E_loc = E // msize
@@ -531,14 +618,13 @@ def _moe_ep_a2a(p, xn, top_idx, top_gate, cfg: ModelConfig,
         buf = jnp.zeros((E * C + 1, d), wdt).at[slot].set(xf[tok])[:-1]
         buf = buf.reshape(E, C, d)
 
-        # GLSU shuffle: expert-major blocks to their owning shard
-        recv = jax.lax.all_to_all(buf, "model", split_axis=0,
-                                  concat_axis=1, tiled=True)      # (E_loc, C*msize, d)
+        # GLSU shuffle: expert-major blocks to their owning shard,
+        # level by level
+        recv = _a2a_dispatch(buf, stages, E_loc)      # (E_loc, C*msize, d)
         h = silu(jnp.einsum("ecd,edf->ecf", recv, wg)) \
             * jnp.einsum("ecd,edf->ecf", recv, wi)
         y = jnp.einsum("ecf,efd->ecd", h.astype(wdt), wo)
-        back = jax.lax.all_to_all(y, "model", split_axis=1,
-                                  concat_axis=0, tiled=True)      # (E, C, d)
+        back = _a2a_combine(y, stages, E_loc)         # (E, C, d)
         flat = jnp.concatenate([back.reshape(E * C, d),
                                 jnp.zeros((1, d), y.dtype)])
         picked = flat[slot].astype(jnp.float32)                   # (N*k, d)
@@ -549,8 +635,8 @@ def _moe_ep_a2a(p, xn, top_idx, top_gate, cfg: ModelConfig,
     y = substrate.shard_map(
         body, mesh=mesh,
         in_specs=(bspec_tok, bspec_idx, bspec_idx,
-                  P("model", None, None), P("model", None, None),
-                  P("model", None, None)),
+                  P(mspec, None, None), P(mspec, None, None),
+                  P(mspec, None, None)),
         out_specs=bspec_tok)(xn, top_idx, top_gate,
                              p["wi"], p["wg"], p["wo"])
     return y

@@ -1,11 +1,31 @@
 """Ring attention — RINGI applied to sequence-parallel attention.
 
-The sequence is sharded across the ring of clusters ("data" axis); KV blocks
-rotate one neighbour hop per step (exactly AraXL's slide-by-1 bus) while
-every device accumulates its queries' online-softmax state.  After n-1 hops
-every query has seen every key with only neighbour communication — the
+The sequence is sharded across a ring of devices; KV blocks rotate one
+neighbour hop per step (exactly AraXL's slide-by-1 bus) while every device
+accumulates its queries' online-softmax state.  After visiting every shard,
+each query has seen every key with only neighbour communication — the
 paper's scalability argument (no all-to-all, latency hidden behind the local
 attention compute) applied to 500k-token contexts.
+
+Two schedules, selected by ``topology=``:
+
+* ``topology=None`` (flat): the historical single-axis ring — n-1 hops on
+  one ``axis``, each a whole-KV-block transfer.
+
+* ``topology=Topology(...)``: the AraXL hierarchy.  The sequence is sharded
+  over *all* topology level axes (outer-major), and the KV rotation walks
+  the levels odometer-style — the innermost (intra-cluster / `lane`) ring
+  rotates every step, and a level-i ring only turns once per full cycle of
+  the levels below it (intra-level ring first, then the inter-level
+  exchange).  Most steps are a single short-wire hop; an odometer wrap
+  additionally rotates each wrapped inner ring once to complete its cycle
+  (up to n_levels hops on that step), but the physically long inter-
+  cluster / inter-pod wires still carry only 1 / (product of inner sizes)
+  of the steps — AraXL's short-wires-do-the-work claim at the sequence
+  level.  The two schedules visit the same blocks in a different order, so
+  results agree with the flat axis up to online-softmax re-association
+  (exact for the max statistics, last-ulp for the sums); both are exact
+  attention.
 
 Exact (online softmax), causal + sliding-window aware, GQA via kv repeat.
 """
@@ -20,6 +40,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import substrate
 from repro.core.ring import ppermute_shift
+from repro.topology import Topology, mesh_levels
 
 
 def _block_attn(q, k, v, q_pos, k_pos, scale, causal, window):
@@ -38,31 +59,65 @@ def _block_attn(q, k, v, q_pos, k_pos, scale, causal, window):
     return m, l, o
 
 
-def ring_attention(q, k, v, mesh: Mesh, *, axis: str = "data",
-                   causal: bool = True, window: int | None = None):
-    """q (B,S,H,D), k/v (B,S,Hkv,D) globally; S sharded over ``axis``.
+def _ring_levels(mesh: Mesh, axis: str, topology: Topology | None):
+    """The KV rotation rings as (axes-tuple, size) pairs, outermost first.
 
-    Returns (B,S,H,D) with the same sharding. One ppermute per step — the
-    KV blocks ride the ring while online-softmax state stays local."""
+    Flat (``topology=None``): one ring over ``axis``.  With a Topology,
+    one ring per level (each level's axes must exist in ``mesh``) — the
+    sequence axis becomes the outer-major flattening of all of them.
+    """
+    if topology is None:
+        return [((axis,), mesh.shape[axis])]
+    return mesh_levels(topology, mesh.shape)
+
+
+def ring_attention(q, k, v, mesh: Mesh, *, axis: str = "data",
+                   topology: Topology | None = None,
+                   causal: bool = True, window: int | None = None):
+    """q (B,S,H,D), k/v (B,S,Hkv,D) globally; S sharded over the ring.
+
+    Communicates across: the single ``axis`` ring (flat), or every level of
+    ``topology`` — the innermost (lane) ring on almost every step, each
+    outer (cluster / pod) ring once per inner cycle.  Returns (B,S,H,D)
+    with the same sharding.  One ppermute per step — the KV blocks ride the
+    ring while online-softmax state stays local."""
     B, S, H, D = q.shape
     Hkv = k.shape[2]
     if Hkv != H:
         k = jnp.repeat(k, H // Hkv, axis=2)
         v = jnp.repeat(v, H // Hkv, axis=2)
-    n = mesh.shape[axis]
+    levels = _ring_levels(mesh, axis, topology)       # outermost first
+    sizes = [s for _, s in levels]
+    n = math.prod(sizes)
     S_loc = S // n
     scale = 1.0 / math.sqrt(D)
+    # flattened-ring stride of one step of each level (outer-major layout)
+    strides = []
+    acc = 1
+    for s in reversed(sizes):
+        strides.append(acc)
+        acc *= s
+    strides = list(reversed(strides))
 
     def body(q_loc, k_loc, v_loc):
-        pos = jax.lax.axis_index(axis)
+        coords = [substrate.axis_index(axes) for axes, _ in levels]
+        pos = sum(c * st for c, st in zip(coords, strides))
         q_pos = pos * S_loc + jnp.arange(S_loc)
         qf = q_loc.astype(jnp.float32)
         m = jnp.full((B, H, S_loc, 1), -jnp.inf, jnp.float32)
         l = jnp.zeros((B, H, S_loc, 1), jnp.float32)
         o = jnp.zeros((B, H, S_loc, D), jnp.float32)
         kc, vc = k_loc.astype(jnp.float32), v_loc.astype(jnp.float32)
-        src = pos
+        offsets = [0] * len(levels)                   # KV rotation odometer
+
+        def rotate(kc, vc, i):
+            axes, size = levels[i]
+            return (ppermute_shift(kc, axes, 1, size),
+                    ppermute_shift(vc, axes, 1, size))
+
         for step in range(n):
+            src = sum(((c + off) % s) * st for c, off, s, st in
+                      zip(coords, offsets, sizes, strides))
             k_pos = src * S_loc + jnp.arange(S_loc)
             mb, lb, ob = _block_attn(qf, kc, vc, q_pos, k_pos, scale,
                                      causal, window)
@@ -72,15 +127,21 @@ def ring_attention(q, k, v, mesh: Mesh, *, axis: str = "data",
             l = l * alpha + lb * beta
             o = o * alpha + ob * beta
             m = m_new
-            if step < n - 1:                      # rotate KV one hop (RINGI)
-                kc = ppermute_shift(kc, (axis,), 1, n)
-                vc = ppermute_shift(vc, (axis,), 1, n)
-                src = (src + 1) % n
+            if step < n - 1:                          # advance the odometer
+                i = len(levels) - 1
+                while offsets[i] == sizes[i] - 1:     # complete inner cycle
+                    kc, vc = rotate(kc, vc, i)
+                    offsets[i] = 0
+                    i -= 1
+                kc, vc = rotate(kc, vc, i)            # one hop on ring i
+                offsets[i] += 1
         safe = jnp.where(l == 0.0, 1.0, l)
-        out = (o / safe).transpose(0, 2, 1, 3)    # (B,S_loc,H,D)
+        out = (o / safe).transpose(0, 2, 1, 3)        # (B,S_loc,H,D)
         return out.astype(q_loc.dtype)
 
-    spec_q = P(None, axis, None, None)
+    seq_axes = tuple(a for axes, _ in levels for a in axes)
+    spec_q = P(None, seq_axes if len(seq_axes) > 1 else seq_axes[0],
+               None, None)
     return substrate.shard_map(body, mesh=mesh,
                                in_specs=(spec_q, spec_q, spec_q),
                                out_specs=spec_q)(q, k, v)

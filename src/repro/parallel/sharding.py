@@ -13,9 +13,17 @@ Logical axes (mapped by :class:`ShardingRules`):
     model   TP dim (heads/ff/experts/vocab) -> model     ["lanes"]
     layers / none                        -> unsharded
 
-AraXL reading: the `model` axis is the intra-cluster lane group (fast,
-fine-grained TP collectives), `data`(x`pod`) the cluster ring (gradient /
-FSDP traffic rides ring-friendly reduce-scatter/all-gather).
+AraXL reading (one mesh axis per :class:`repro.topology.Topology` level):
+the `model` axis is the intra-cluster lane group (fast, fine-grained TP
+collectives), `data` the cluster ring, `pod` the outermost ring (gradient /
+FSDP traffic rides ring-friendly reduce-scatter/all-gather).  A rule value
+may be a *tuple* of mesh axes — that is how the hierarchical MoE maps its
+logical `model` axis over every topology level at once
+(`repro.models.layers._moe_ep_a2a`).
+
+Nothing in this module communicates: every function here only derives
+PartitionSpecs/NamedShardings from the rule table; the collectives they
+imply are issued by the layers that consume them.
 """
 from __future__ import annotations
 

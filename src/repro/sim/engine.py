@@ -12,12 +12,13 @@ The model captures the mechanisms the paper's evaluation turns on:
 * vector loads see the GLSU request-response latency (``glsu_lat``) before
   the first element lands;
 * slides pay ``params.slide_cost(hops)`` before streaming — priced per wire
-  level by the shared :class:`repro.topology.Topology` (intra-cluster short
-  wires vs inter-cluster RINGI hops under ``hierarchy="two-level"``, every
-  hop a ring hop under ``"flat"``); traces tag each slide with the level its
-  critical path crosses;
+  level by the shared :class:`repro.topology.Topology` (each link at the
+  outermost boundary it crosses: intra-cluster short wires, the inter-
+  cluster RINGI ring, and the pod ring beyond it for ``n_pods > 1``; every
+  hop at the longest-wire price under ``"flat"``); traces tag each slide
+  with the wire level its critical path crosses;
 * reductions stream their intra-lane phase on the FPU, then pay the
-  vl-independent inter-lane + inter-cluster log-tree latency
+  vl-independent log-tree latency of every topology level
   (``params.red_tree_lat()``, hierarchy-dependent) — the exact term the
   paper blames for the softmax / fdotproduct scaling gap;
 * FPU utilization = FPU-busy cycles / total cycles, the paper's metric.

@@ -7,8 +7,10 @@ model chains exactly the way the hardware would, not by program order.
 
 When constructed with a :class:`repro.topology.Topology`, every slide is
 additionally tagged with the wire level its critical path crosses
-(``meta["level"] = "intra" | "inter"``) so the engine's per-level hop pricing
-and the hierarchy ablations can attribute RINGI traffic to the right wires.
+(``meta["level"]`` — ``"intra"``/``"inter"`` on the paper's two-level
+machine, the level's own name, e.g. ``"pod"``, further out) so the engine's
+per-level hop pricing and the hierarchy ablations can attribute RINGI
+traffic to the right wires.
 """
 from __future__ import annotations
 

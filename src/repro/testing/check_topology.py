@@ -5,8 +5,10 @@ params for that grid, hands ``params.topology`` — the *same value* — to
 ``repro.core.machine.make_machine``, asserts the machine stores it verbatim
 (``machine.spec.topology == params.topology``), and then runs the GLSU round
 trip, a slide and both reductions under both hierarchies against numpy
-oracles.  This is the acceptance gate that the two stacks can never drift
-apart on geometry again.
+oracles.  With 8 devices it additionally checks the *three-level* 2x2x2
+(pod, cluster, lane) machine — the mesh grows one axis per topology level
+and the hierarchical GLSU/RINGI walk the levels generically.  This is the
+acceptance gate that the two stacks can never drift apart on geometry again.
 
 Usage: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
        python -m repro.testing.check_topology [n]
@@ -34,6 +36,15 @@ def main(n: int = 8) -> None:
     assert grids, f"n={n} has no power-of-two (C, L) factorisation to check"
     rng = np.random.default_rng(0)
 
+    def exercise(v, x):
+        """GLSU round trip, both reductions and a slide vs numpy oracles."""
+        r = v.vle(x)
+        np.testing.assert_array_equal(np.asarray(v.vse(r)), x)
+        np.testing.assert_allclose(float(v.vredsum(r)), x.sum(), rtol=1e-12)
+        np.testing.assert_allclose(float(v.vredmax(r)), x.max(), rtol=0)
+        s = np.asarray(v.vse(v.vslide1down(r, fill=-1.0)))
+        np.testing.assert_allclose(s, np.concatenate([x[1:], [-1.0]]))
+
     for C, L in grids:
         params = araxl_params(n, lanes_per_cluster=L)
         assert params.topology.grid == (C, L)
@@ -43,16 +54,27 @@ def main(n: int = 8) -> None:
             # one Topology, shared by value across both stacks
             assert v.spec.topology == topo, (v.spec.topology, topo)
             assert v.hierarchy == hierarchy
-
-            x = rng.normal(size=n * n * 2)
-            r = v.vle(x)
-            np.testing.assert_array_equal(np.asarray(v.vse(r)), x)
-            np.testing.assert_allclose(float(v.vredsum(r)), x.sum(),
-                                       rtol=1e-12)
-            np.testing.assert_allclose(float(v.vredmax(r)), x.max(), rtol=0)
-            s = np.asarray(v.vse(v.vslide1down(r, fill=-1.0)))
-            np.testing.assert_allclose(s, np.concatenate([x[1:], [-1.0]]))
+            exercise(v, rng.normal(size=n * n * 2))
         print(f"check_topology C{C}xL{L} ok")
+
+    # Three-level (pod, cluster, lane) machines: one mesh axis per level,
+    # params and emulator still share the identical Topology value.
+    if n == 8:
+        for n_pods, lpc in ((2, 2), (2, 1), (4, 2)):
+            params = araxl_params(n, lanes_per_cluster=lpc, n_pods=n_pods)
+            topo = params.topology
+            assert topo.n_levels == 3
+            assert topo.shape == (n_pods, n // n_pods // lpc, lpc)
+            for hierarchy in ("flat", "three-level"):
+                topo_h = params.with_hierarchy(hierarchy).topology
+                v = make_machine(topology=topo_h, vlen_bits=4096,
+                                 dtype=jnp.float64)
+                assert v.spec.topology == topo_h
+                assert v.hierarchy == hierarchy
+                assert set(v.spec.mesh.shape) == {"pod", "cluster", "lane"}
+                exercise(v, rng.normal(size=n * n * 2))
+            print(f"check_topology P{n_pods}x"
+                  f"C{n // n_pods // lpc}xL{lpc} ok")
 
     print(f"check_topology OK (n={n}, grids={grids})")
 

@@ -1,142 +1,385 @@
 """Topology — the one description of AraXL's machine geometry (§III-B).
 
 AraXL's scalability argument (§III-B.4, §IV) rests on a *hierarchical*
-interconnect: C clusters of L lanes each, where intra-cluster traffic rides
-short wires (log2(L) cheap hops) and only the per-cluster stage ever touches
-the long inter-cluster ring (log2(C) expensive hops).  Before this module the
-repo carried two disconnected copies of that geometry — the emulation layer
-(`repro.core.layout` / `ring` / `glsu`) took ``hierarchy="flat"|"two-level"``
-kwargs while the analytical layer (`repro.sim`) hard-coded a flat ring.
+interconnect: clusters of lanes, where intra-cluster traffic rides short
+wires (log2(L) cheap hops) and only the per-cluster stage ever touches the
+long inter-cluster ring (log2(C) expensive hops).  Ara2 and Spatz show the
+cluster-of-clusters shape recurses — pods of clusters of lanes — so the
+geometry here is an ordered tuple of :class:`Level` s (outermost first),
+each with a name (its mesh axis), a fan-out, and a per-hop wire price:
+
+    Topology.from_levels([("pod", 2, 8.0), ("cluster", 8, 4.0),
+                          ("lane", 4, 2.0)])
 
 :class:`Topology` is the single shared value: ``repro.sim.AraXLParams``
 composes one (``params.topology``), ``repro.core.machine.make_machine``
-accepts one and stores it on the ``VectorMachineSpec``, and ``launch/`` +
+accepts one and builds one mesh axis per level, and ``launch/`` +
 ``benchmarks/run.py`` thread one through the fig6/fig7 scaling surface.  It
 is pure Python (no jax import) so the sim layer stays data-free.
 
 Hop pricing
 -----------
 
-Two wire classes, priced independently:
+Every level prices its own wires: ``levels[i].hop_lat`` is the cycles for
+one hop on level i's interconnect.  A link of the flattened (outer-major)
+ring is priced by the *outermost* boundary it crosses — the most expensive
+wire class on its path.  Wire-class labels (:meth:`wire_labels`) keep the
+historical two names for the two innermost levels — ``"intra"`` (short
+intra-cluster wires) and ``"inter"`` (the inter-cluster ring) — and use the
+level's own name for anything further out (e.g. ``"pod"``).
 
-``intra_hop_lat``  one hop on the intra-cluster interconnect (short wires)
-``inter_hop_lat``  one hop on the inter-cluster ring (RINGI; grows with C)
-
-``hierarchy="flat"`` models the flattened C*L ring AraXL argues against:
-every hop is an inter-class (long-wire) hop.  ``hierarchy="two-level"`` is
-the paper's design: :meth:`hop_cost` prices a link by whether it crosses a
-cluster boundary, and :meth:`slide_cost` prices a k-position slide by its
-critical-path lane (the one that crosses the most boundaries).
+``hierarchy="flat"`` models the flattened ring AraXL argues against: every
+hop is priced as the outermost (longest-wire) class.  The hierarchical
+model — ``"two-level"`` for two levels, ``"three-level"`` for three, … —
+prices each link/stage by the level it actually rides, which is the paper's
+physical-scalability claim.  The legacy two-entry constructor
+``Topology(C, L, hierarchy=...)`` still parses and prices bit-identically
+to the PR 2 calibration (flat/two-level ``red_tree_lat`` at 64 lanes:
+286 / 106 cycles — asserted by tests against ``BENCH_sim.json``).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 
-#: the two interconnect models (shared by core.ring, core.glsu, sim.params)
+#: the two historical interconnect models (kept for the two-level case;
+#: deeper topologies name their hierarchical model "<n>-level")
 HIERARCHIES = ("flat", "two-level")
 
-#: wire classes a transfer can ride
+#: the two historical wire classes; deeper levels label wires by level name
 LEVELS = ("intra", "inter")
 
+#: "<n>-level" spellings for the common depths (hier_name falls back to
+#: the numeric form for anything deeper)
+_HIER_WORDS = {1: "one-level", 2: "two-level", 3: "three-level",
+               4: "four-level", 5: "five-level"}
 
-def check_hierarchy(hierarchy: str) -> None:
-    if hierarchy not in HIERARCHIES:
-        raise ValueError(f"hierarchy must be one of {HIERARCHIES}, "
-                         f"got {hierarchy!r}")
+#: default per-level axis names for parse_topology("PxCxL") style specs,
+#: innermost last; levels beyond the pod are named by their depth from the
+#: innermost (lane=1, cluster=2, pod=3): "l4", "l5", ...
+DEFAULT_LEVEL_AXES = ("pod", "cluster", "lane")
+
+#: default per-hop wire price for level j counted from the innermost
+#: (lane) level outward: 2, 4, 8, ... cycles — each level's wires are
+#: roughly twice as long as the level below.
+def default_hop_lat(depth_from_inner: int) -> float:
+    return 2.0 * (2 ** depth_from_inner)
+
+
+def hier_name(n_levels: int) -> str:
+    """The canonical hierarchical-model name for an n-deep topology."""
+    return _HIER_WORDS.get(n_levels, f"{n_levels}-level")
+
+
+def check_hierarchy(hierarchy: str, n_levels: int | None = None) -> None:
+    """Validate a hierarchy string: "flat" always parses; the hierarchical
+    spelling must match the level count when one is given (so a two-entry
+    topology still rejects "three-level", as it always did)."""
+    if hierarchy == "flat":
+        return
+    if n_levels is not None:
+        if hierarchy != hier_name(n_levels):
+            raise ValueError(
+                f"hierarchy must be 'flat' or {hier_name(n_levels)!r} for a "
+                f"{n_levels}-level topology, got {hierarchy!r}")
+        return
+    stem = hierarchy[: -len("-level")] if hierarchy.endswith("-level") else ""
+    known = {w[: -len("-level")] for w in _HIER_WORDS.values()}
+    if stem in known or stem.isdigit():
+        return
+    raise ValueError(f"hierarchy must be 'flat' or a hier_name() spelling "
+                     f"('two-level', 'three-level', ..., '<n>-level'), "
+                     f"got {hierarchy!r}")
 
 
 @dataclasses.dataclass(frozen=True)
-class Topology:
-    """C clusters x L lanes/cluster plus the hierarchy and per-level wire
-    prices.  Equality is by value, so two stacks provably share a topology
-    when their ``Topology`` objects compare equal."""
+class Level:
+    """One level of the interconnect hierarchy.
 
-    n_clusters: int
-    lanes_per_cluster: int
-    hierarchy: str = "two-level"
-    cluster_axis: "str | tuple[str, ...]" = "cluster"
-    lane_axis: "str | tuple[str, ...]" = "lane"
-    intra_hop_lat: float = 2.0        # short-wire hop (cycles)
-    inter_hop_lat: float = 4.0        # inter-cluster ring hop (cycles)
+    ``axis``     mesh-axis name(s) this level shards over (str, or a tuple
+                 of names treated as one flattened ring)
+    ``size``     fan-out: how many level-(i+1) groups one group contains
+    ``hop_lat``  cycles for one hop on this level's wires
+    """
+    axis: "str | tuple[str, ...]"
+    size: int
+    hop_lat: float
 
     def __post_init__(self):
-        if self.n_clusters < 1 or self.lanes_per_cluster < 1:
-            raise ValueError(f"need >=1 cluster and >=1 lane/cluster, got "
-                             f"C={self.n_clusters} L={self.lanes_per_cluster}")
-        check_hierarchy(self.hierarchy)
+        if self.size < 1:
+            raise ValueError(f"level {self.axis!r} needs size >= 1, "
+                             f"got {self.size}")
+        if self.hop_lat < 0:
+            raise ValueError(f"level {self.axis!r} needs hop_lat >= 0, "
+                             f"got {self.hop_lat}")
+
+
+def _as_level(entry) -> Level:
+    if isinstance(entry, Level):
+        return entry
+    return Level(*entry)
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class Topology:
+    """An N-deep machine geometry: ``levels`` outermost-first, plus which
+    pricing model (``hierarchy``) applies.  Equality is by value, so two
+    stacks provably share a topology when their ``Topology`` objects
+    compare equal.
+
+    The historical two-entry form ``Topology(C, L, hierarchy=...,
+    cluster_axis=..., lane_axis=..., intra_hop_lat=..., inter_hop_lat=...)``
+    builds the equivalent two-level geometry and is bit-identical to PR 2's
+    calibration; pass ``levels=`` (or use :meth:`from_levels`) for deeper
+    hierarchies.
+    """
+
+    levels: tuple
+    hierarchy: str
+
+    def __init__(self, n_clusters: int | None = None,
+                 lanes_per_cluster: int | None = None,
+                 hierarchy: str | None = None,
+                 cluster_axis: "str | tuple[str, ...]" = "cluster",
+                 lane_axis: "str | tuple[str, ...]" = "lane",
+                 intra_hop_lat: float = 2.0,
+                 inter_hop_lat: float = 4.0,
+                 *, levels=None):
+        if levels is not None:
+            if n_clusters is not None or lanes_per_cluster is not None:
+                raise ValueError("pass either levels= or "
+                                 "(n_clusters, lanes_per_cluster), not both")
+            levels = tuple(_as_level(l) for l in levels)
+            if not levels:
+                raise ValueError("need at least one level")
+        else:
+            if n_clusters is None or lanes_per_cluster is None:
+                raise ValueError("pass (n_clusters, lanes_per_cluster) or "
+                                 "levels=")
+            if n_clusters < 1 or lanes_per_cluster < 1:
+                raise ValueError(
+                    f"need >=1 cluster and >=1 lane/cluster, got "
+                    f"C={n_clusters} L={lanes_per_cluster}")
+            levels = (Level(cluster_axis, n_clusters, inter_hop_lat),
+                      Level(lane_axis, lanes_per_cluster, intra_hop_lat))
+        if hierarchy is None:
+            hierarchy = hier_name(len(levels))
+        check_hierarchy(hierarchy, len(levels))
+        names = [l.axis for l in levels]
+        if len(set(names)) != len(names):
+            raise ValueError(f"level axis names must be unique, got {names}")
+        object.__setattr__(self, "levels", levels)
+        object.__setattr__(self, "hierarchy", hierarchy)
+        # Precomputed pricing tables (the sim prices every trace record
+        # through this frozen value, link by link — don't rebuild per call).
+        strides, s = [], 1
+        for l in reversed(levels):
+            strides.append(s)
+            s *= l.size
+        object.__setattr__(self, "_strides", tuple(reversed(strides)))
+        groups, g = [], 1
+        for l in levels:
+            g *= l.size
+            groups.append(g)
+        object.__setattr__(self, "_groups_t", tuple(groups))
+        labels = []
+        for i, l in enumerate(levels):
+            depth = len(levels) - 1 - i                # 0 = innermost
+            if depth == 0:
+                labels.append("intra")
+            elif depth == 1:
+                labels.append("inter")
+            else:
+                labels.append(l.axis if isinstance(l.axis, str)
+                              else "+".join(l.axis))
+        object.__setattr__(self, "_labels", tuple(labels))
+
+    @classmethod
+    def from_levels(cls, levels, hierarchy: str | None = None) -> "Topology":
+        """Build from ``[(axis, size, hop_lat), ...]`` (outermost first)."""
+        return cls(levels=levels, hierarchy=hierarchy)
 
     # -- geometry -----------------------------------------------------------
     @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    @property
+    def shape(self) -> tuple:
+        """Per-level sizes, outermost first (the mesh shape)."""
+        return tuple(l.size for l in self.levels)
+
+    @property
     def n_lanes(self) -> int:
-        """Total lanes (= flattened ring size = C * L)."""
-        return self.n_clusters * self.lanes_per_cluster
+        """Total lanes (= flattened ring size = product of all fan-outs)."""
+        return math.prod(self.shape)
+
+    @property
+    def n_clusters(self) -> int:
+        """Groups seen by the innermost level: the product of every outer
+        fan-out (multi-pod machines fold their pods in here)."""
+        return self.n_lanes // self.lanes_per_cluster
+
+    @property
+    def lanes_per_cluster(self) -> int:
+        return self.levels[-1].size
 
     @property
     def grid(self) -> tuple[int, int]:
         return (self.n_clusters, self.lanes_per_cluster)
 
     @property
-    def axis_names(self) -> tuple:
-        return (self.cluster_axis, self.lane_axis)
+    def cluster_axis(self) -> "str | tuple[str, ...]":
+        """Axis name(s) of everything above the lane level (a single name
+        for two-level topologies, a tuple for deeper ones)."""
+        outer = self.levels[:-1]
+        if len(outer) == 1:
+            return outer[0].axis
+        names: list = []
+        for l in outer:
+            names.extend((l.axis,) if isinstance(l.axis, str) else l.axis)
+        return tuple(names)
 
-    def coords(self, p: int) -> tuple[int, int]:
-        """Flattened ring position p (cluster-major, lane-minor) -> (c, l)."""
-        return divmod(p % self.n_lanes, self.lanes_per_cluster)
+    @property
+    def lane_axis(self) -> "str | tuple[str, ...]":
+        return self.levels[-1].axis
+
+    @property
+    def intra_hop_lat(self) -> float:
+        """Hop price of the innermost (intra-cluster) wires."""
+        return self.levels[-1].hop_lat
+
+    @property
+    def inter_hop_lat(self) -> float:
+        """Hop price of the level just above the lanes (the RINGI ring)."""
+        return self.levels[-2].hop_lat if self.n_levels > 1 \
+            else self.levels[-1].hop_lat
+
+    @property
+    def axis_names(self) -> tuple:
+        """Per-level axis entries, outermost first."""
+        return tuple(l.axis for l in self.levels)
+
+    def strides(self) -> tuple[int, ...]:
+        """Flattened-ring positions spanned by one step of each level
+        (outermost first; the innermost stride is always 1)."""
+        return self._strides
+
+    def coords(self, p: int) -> tuple:
+        """Flattened ring position p (outer-major) -> per-level coordinates
+        (outermost first; ``(c, l)`` for a two-level topology)."""
+        p %= self.n_lanes
+        out = []
+        for stride, l in zip(self.strides(), self.levels):
+            out.append((p // stride) % l.size)
+        return tuple(out)
 
     def cluster_of(self, p: int) -> int:
-        return self.coords(p)[0]
+        """Flattened index of the cluster holding ring position p."""
+        return (p % self.n_lanes) // self.lanes_per_cluster
 
     def lane_of(self, p: int) -> int:
-        return self.coords(p)[1]
+        return p % self.lanes_per_cluster
 
     # -- wire pricing -------------------------------------------------------
+    def wire_labels(self) -> tuple[str, ...]:
+        """Per-level wire-class labels, outermost first.  The innermost two
+        keep their historical names ("intra" / "inter"); deeper levels are
+        labelled by their axis name (e.g. "pod")."""
+        return self._labels
+
+    def _groups(self) -> tuple[int, ...]:
+        """Cumulative group counts, outermost first: how many level-i blocks
+        the whole machine contains (1 means level i has no boundaries)."""
+        return self._groups_t
+
+    def _link_index(self, p: int) -> int:
+        """Level index (outermost first) whose wires the ring link p -> p+1
+        rides: the outermost level whose coordinate changes across the link
+        (including the wrap link n-1 -> 0)."""
+        v = (p % self.n_lanes) + 1
+        groups = self._groups()
+        for i, stride in enumerate(self.strides()):
+            if groups[i] > 1 and v % stride == 0:
+                return i
+        return self.n_levels - 1
+
     def link_level(self, p: int) -> str:
-        """Wire class of the ring link p -> p+1: "inter" iff it crosses a
-        cluster boundary (including the wrap link n-1 -> 0)."""
-        return ("inter" if (p + 1) % self.lanes_per_cluster == 0 and
-                self.n_clusters > 1 else "intra")
+        """Wire class of the ring link p -> p+1: the *outermost* boundary it
+        crosses (including the wrap link n-1 -> 0)."""
+        return self.wire_labels()[self._link_index(p)]
 
     def hop_lat(self, level: str) -> float:
-        if level not in LEVELS:
-            raise ValueError(f"level must be one of {LEVELS}, got {level!r}")
-        return self.intra_hop_lat if level == "intra" else self.inter_hop_lat
+        """Hop price of one wire class (by label, see :meth:`wire_labels`)."""
+        labels = self.wire_labels()
+        if level not in labels:
+            raise ValueError(f"level must be one of {labels}, got {level!r}")
+        return self.levels[labels.index(level)].hop_lat
 
     def hop_cost(self, src: int, dst: int) -> float:
         """Cycles for one transfer from ring position ``src`` forward to
-        ``dst`` (sum of link prices along the directed ring path).  Under the
-        flat hierarchy every link is priced as a long-wire ring hop."""
+        ``dst`` (sum of link prices along the directed ring path).  Under
+        the flat hierarchy every link is priced as the outermost (longest)
+        wire class."""
         n = self.n_lanes
         steps = (dst - src) % n
         if self.hierarchy == "flat":
-            return steps * self.inter_hop_lat
-        return sum(self.hop_lat(self.link_level((src + i) % n))
+            return steps * self.levels[0].hop_lat
+        return sum(self.levels[self._link_index((src + i) % n)].hop_lat
                    for i in range(steps))
 
+    def slide_steps(self, hops: int) -> tuple[int, ...]:
+        """Critical-path step counts per level (outermost first) of a slide
+        by ``hops`` positions: the slowest lane crosses
+        ``ceil(hops / span_i)`` boundaries of level i or outer (span_i =
+        positions per level-i block), and each crossing is priced at the
+        outermost level it touches."""
+        hops = max(0, hops)
+        groups = self._groups()
+        steps, prev = [], 0
+        for i, stride in enumerate(self.strides()):
+            if groups[i] > 1:
+                # level-i-or-outer boundaries recur every stride_i ring
+                # positions, so a window of `hops` consecutive links holds
+                # at most ceil(hops / stride_i) of them
+                b = min(hops, math.ceil(hops / stride))
+            else:
+                b = prev
+            steps.append(b - prev)
+            prev = b
+        # innermost level absorbs every remaining step (degenerate 1-lane
+        # machines included)
+        steps[-1] += hops - prev
+        return tuple(steps)
+
     def slide_crossings(self, hops: int) -> int:
-        """Cluster-boundary crossings on the *critical* lane path of a slide
-        by ``hops`` positions (the completion bound: the slowest lane)."""
-        if self.n_clusters == 1:
-            return 0
-        return min(hops, math.ceil(hops / self.lanes_per_cluster))
+        """Boundary crossings above the innermost level on the critical
+        lane path of a slide by ``hops`` (the completion bound)."""
+        return sum(self.slide_steps(hops)[:-1])
 
     def slide_level(self, hops: int = 1) -> str:
         """Wire class the critical path of a ``hops``-position slide crosses
-        ("inter" whenever any lane must cross a cluster boundary)."""
-        return "inter" if self.slide_crossings(max(1, hops)) else "intra"
+        (the outermost level any lane must touch)."""
+        steps = self.slide_steps(max(1, hops))
+        for label, s in zip(self.wire_labels(), steps):
+            if s:
+                return label
+        return self.wire_labels()[-1]
 
     def slide_cost(self, hops: int) -> float:
         """Critical-path cycles before a slide by ``hops`` can stream.
 
-        flat:       every hop is a full ring hop -> hops * inter_hop_lat.
-        two-level:  the slowest lane crosses ceil(hops/L) cluster boundaries;
-                    its remaining steps ride the short intra-cluster wires.
+        flat:          every hop is priced at the outermost wire class.
+        hierarchical:  the slowest lane crosses ceil(hops/stride_i)
+                       boundaries of each level; each crossing is priced at
+                       the outermost level it touches, the remaining steps
+                       ride the short innermost wires.
         """
         hops = max(0, hops)
         if self.hierarchy == "flat":
-            return hops * self.inter_hop_lat
-        inter = self.slide_crossings(hops)
-        return inter * self.inter_hop_lat + (hops - inter) * self.intra_hop_lat
+            return hops * self.levels[0].hop_lat
+        return sum(s * l.hop_lat
+                   for s, l in zip(self.slide_steps(hops), self.levels))
 
     @staticmethod
     def tree_stages(size: int):
@@ -150,36 +393,59 @@ class Topology:
     def tree_wire_cycles(self) -> float:
         """Pure wire cycles of a full cross-machine log-tree reduction.
 
-        flat:       every stage spans the whole C*L ring at ring-hop price.
-        two-level:  log2(L) stages on intra-cluster wires, then log2(C)
-                    stages on the ring — the long wires never see lane
-                    traffic, which is the paper's physical-scalability claim.
+        flat:          every stage spans the whole flattened ring at the
+                       outermost wire price.
+        hierarchical:  log2(size_i) stages per level, each on that level's
+                       own wires — the long wires never see inner-level
+                       traffic, which is the paper's physical-scalability
+                       claim (and it recurses: pod wires never see cluster
+                       traffic either).
 
         Note this prices bare wires only; AraXL's *reduction* pipeline runs
         its intra-cluster stages through the calibrated A2A stage
         (``AraXLParams.interlane_lat``), so ``red_tree_lat`` consumes this
-        method's ring terms but substitutes its own intra-cluster stage cost.
+        method's outer-level terms but substitutes its own intra-cluster
+        stage cost.
         """
         if self.hierarchy == "flat":
-            return sum(s * self.inter_hop_lat
+            return sum(s * self.levels[0].hop_lat
                        for s in self.tree_stages(self.n_lanes))
-        intra = sum(s * self.intra_hop_lat
-                    for s in self.tree_stages(self.lanes_per_cluster))
-        inter = sum(s * self.inter_hop_lat
-                    for s in self.tree_stages(self.n_clusters))
-        return intra + inter
+        return sum(s * l.hop_lat
+                   for l in self.levels for s in self.tree_stages(l.size))
 
     # -- derivation helpers -------------------------------------------------
     def with_hierarchy(self, hierarchy: str) -> "Topology":
-        return dataclasses.replace(self, hierarchy=hierarchy)
+        return Topology(levels=self.levels, hierarchy=hierarchy)
+
+    def with_levels(self, levels, hierarchy: str | None = None) -> "Topology":
+        """Same pricing model, new geometry (hierarchy respelled to the new
+        depth unless explicitly given or flat)."""
+        if hierarchy is None and self.hierarchy == "flat":
+            hierarchy = "flat"
+        return Topology(levels=levels, hierarchy=hierarchy)
 
     def with_grid(self, n_clusters: int, lanes_per_cluster: int) -> "Topology":
-        return dataclasses.replace(self, n_clusters=n_clusters,
-                                   lanes_per_cluster=lanes_per_cluster)
+        """Re-factorise as a two-level C x L machine.  Both the axis name
+        and the wire price of the new outer level come from the ring level
+        just above the lanes (``inter_hop_lat``); on a deeper topology the
+        levels outside that ring are folded away (their counts live on in
+        ``n_clusters``)."""
+        ring = self.levels[-2] if self.n_levels > 1 else self.levels[0]
+        inner = self.levels[-1]
+        lvls = (Level(ring.axis, n_clusters, self.inter_hop_lat),
+                Level(inner.axis if self.n_levels > 1 else "lane",
+                      lanes_per_cluster, self.intra_hop_lat))
+        hierarchy = "flat" if self.hierarchy == "flat" else None
+        return Topology(levels=lvls, hierarchy=hierarchy)
 
     def describe(self) -> dict:
         """JSON-friendly record (benchmarks / dry-run artifacts)."""
         return {
+            "n_levels": self.n_levels,
+            "levels": [{"axis": list(l.axis) if isinstance(l.axis, tuple)
+                        else l.axis,
+                        "size": l.size, "hop_lat": l.hop_lat}
+                       for l in self.levels],
             "n_clusters": self.n_clusters,
             "lanes_per_cluster": self.lanes_per_cluster,
             "n_lanes": self.n_lanes,
@@ -189,6 +455,29 @@ class Topology:
             "intra_hop_lat": self.intra_hop_lat,
             "inter_hop_lat": self.inter_hop_lat,
         }
+
+
+def mesh_levels(topology: Topology, mesh_shape) -> list:
+    """Resolve a topology's levels against a mesh: (mesh-axes tuple, size)
+    pairs, outermost first, validating that every level axis exists in
+    ``mesh_shape`` (a mapping of axis name -> size) and that the sizes
+    agree.  Shared by the hierarchical workloads (ring attention, MoE
+    all-to-all) so level/mesh mismatch errors are raised once, identically.
+    """
+    levels = []
+    for l in topology.levels:
+        axes = (l.axis,) if isinstance(l.axis, str) else tuple(l.axis)
+        size = 1
+        for a in axes:
+            if a not in mesh_shape:
+                raise ValueError(f"topology level axis {a!r} not in mesh "
+                                 f"axes {tuple(mesh_shape)}")
+            size *= mesh_shape[a]
+        if size != l.size:
+            raise ValueError(f"topology level {l.axis!r} size {l.size} != "
+                             f"mesh size {size}")
+        levels.append((axes, size))
+    return levels
 
 
 def factorizations(n_lanes: int, power_of_two: bool = True):
@@ -205,16 +494,53 @@ def factorizations(n_lanes: int, power_of_two: bool = True):
     return out
 
 
-def parse_topology(s: str, **kw) -> Topology:
-    """Parse "CxL" or "CxL:hierarchy" (e.g. "16x4:two-level") into a
-    Topology; extra kwargs (axis names, hop prices) pass through."""
+def parse_topology(s: str, *, level_axes=None, hop_lats=None, **kw) -> Topology:
+    """Parse an N-level topology spec into a :class:`Topology`.
+
+    Grammar: ``S1xS2x...xSk[:hierarchy]`` — sizes outermost first, e.g.
+    ``"16x4"`` (two-level), ``"16x4:flat"``, ``"2x8x4"`` (pods x clusters
+    x lanes), ``"2x8x4:flat"``.
+
+    Two sizes keep the legacy keywords (``cluster_axis`` / ``lane_axis`` /
+    ``intra_hop_lat`` / ``inter_hop_lat`` pass through to the two-level
+    constructor, bit-identical to PR 2).  Deeper specs name their levels
+    from ``level_axes`` (default: ``("pod", "cluster", "lane")`` innermost-
+    last; levels outside the pod are named by depth from the innermost —
+    "l4", "l5", ...) and price them from ``hop_lats`` (default: 2, 4, 8,
+    ... cycles doubling outward).  Keywords that don't apply to the spec's
+    depth raise.
+    """
     spec, _, hierarchy = s.partition(":")
     try:
-        c, _, l = spec.partition("x")
-        C, L = int(c), int(l)
+        sizes = tuple(int(part) for part in spec.split("x"))
+        if len(sizes) < 2:
+            raise ValueError(spec)
     except ValueError:
-        raise ValueError(f"topology spec must look like '16x4[:hierarchy]', "
-                         f"got {s!r}") from None
-    if hierarchy:
-        kw["hierarchy"] = hierarchy
-    return Topology(C, L, **kw)
+        raise ValueError(f"topology spec must look like '16x4[:hierarchy]' "
+                         f"or '2x8x4[:hierarchy]', got {s!r}") from None
+    if len(sizes) == 2:
+        if level_axes is not None or hop_lats is not None:
+            raise ValueError(
+                f"level_axes/hop_lats apply to specs deeper than two levels; "
+                f"for {s!r} use cluster_axis/lane_axis and "
+                f"intra_hop_lat/inter_hop_lat")
+        if hierarchy:
+            kw["hierarchy"] = hierarchy
+        return Topology(*sizes, **kw)
+    if kw:
+        raise ValueError(
+            f"{sorted(kw)} apply to two-level specs only; for {s!r} pass "
+            f"level_axes=/hop_lats= (one entry per level)")
+    k = len(sizes)
+    if level_axes is None:
+        pad = tuple(f"l{j}" for j in range(k, len(DEFAULT_LEVEL_AXES), -1))
+        level_axes = (pad + DEFAULT_LEVEL_AXES)[-k:]
+    if len(level_axes) != k:
+        raise ValueError(f"need {k} level axes for {s!r}, got {level_axes}")
+    if hop_lats is None:
+        hop_lats = tuple(default_hop_lat(k - 1 - i) for i in range(k))
+    if len(hop_lats) != k:
+        raise ValueError(f"need {k} hop latencies for {s!r}, got {hop_lats}")
+    levels = [Level(a, n, lat) for a, n, lat in zip(level_axes, sizes,
+                                                    hop_lats)]
+    return Topology(levels=levels, hierarchy=hierarchy or None)

@@ -1,0 +1,59 @@
+"""Docs can't rot: every fenced ``python`` block in docs/*.md must execute.
+
+Blocks are concatenated per document (so later blocks may build on earlier
+ones) and run in a subprocess under the tier-1 environment — offline, CPU,
+8 fake devices, repo root as cwd, ``src`` on PYTHONPATH via
+``repro.substrate``-routed imports only.  No network, no pip.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOCS = sorted((ROOT / "docs").glob("*.md"))
+
+_FENCE = re.compile(r"^```python\n(.*?)^```", re.DOTALL | re.MULTILINE)
+
+
+def doc_blocks(path: pathlib.Path) -> list[str]:
+    return [m.group(1) for m in _FENCE.finditer(path.read_text())]
+
+
+def test_docs_exist_and_have_executable_blocks():
+    names = {p.name for p in DOCS}
+    assert {"ARCHITECTURE.md", "TOPOLOGY.md"} <= names, names
+    for required in ("ARCHITECTURE.md", "TOPOLOGY.md"):
+        assert doc_blocks(ROOT / "docs" / required), \
+            f"{required} has no fenced python blocks"
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_doc_blocks_execute(doc, tmp_path):
+    blocks = doc_blocks(doc)
+    if not blocks:
+        pytest.skip(f"{doc.name}: no python blocks")
+    script = tmp_path / f"{doc.stem}_blocks.py"
+    parts = []
+    for i, block in enumerate(blocks):
+        parts.append(f"# --- {doc.name} block {i + 1} ---\n{block}")
+    script.write_text("\n".join(parts))
+
+    env = dict(os.environ)
+    # append (don't clobber) any pre-set flags, matching scripts/ci.sh
+    extra = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8"
+                        + (" " + extra if extra else ""))
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, str(script)], cwd=ROOT, env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"{doc.name} code blocks failed (rc={proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")

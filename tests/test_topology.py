@@ -1,15 +1,21 @@
-"""Units for the shared Topology abstraction (geometry, per-level hop
-pricing, the flat-vs-two-level tree claim, with_lanes clamping) plus the
-multi-device check that the emulator and the sim provably share one
-Topology value across every 8-device C x L factorisation."""
+"""Units for the shared Topology abstraction (N-level geometry, per-level
+hop pricing, the flat-vs-hierarchical tree claim, with_lanes clamping), the
+regression gate that two-level parse/pricing stays byte-identical to the
+PR 2 calibration in BENCH_sim.json, plus the multi-device check that the
+emulator and the sim provably share one Topology value across every
+8-device factorisation (two- and three-level)."""
+import json
 import math
+import pathlib
 
 import pytest
 
 from repro.sim import AraXLParams, ara2_params, araxl_params, build_trace
 from repro.testing.subproc import run_check
-from repro.topology import (HIERARCHIES, Topology, factorizations,
-                            parse_topology)
+from repro.topology import (HIERARCHIES, Level, Topology, factorizations,
+                            hier_name, parse_topology)
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +139,118 @@ def test_all_64_lane_factorisations_price_coherently(C, L):
         assert p.red_tree_lat() < flat.red_tree_lat()
     # the log-tree term is made of the same per-level wire prices
     assert p.topology.tree_wire_cycles() <= flat.topology.tree_wire_cycles()
+
+
+# ---------------------------------------------------------------------------
+# N-level geometry (pods of clusters of lanes)
+# ---------------------------------------------------------------------------
+
+def test_three_level_geometry_and_labels():
+    t = Topology.from_levels([("pod", 2, 8.0), ("cluster", 8, 4.0),
+                              ("lane", 4, 2.0)])
+    assert t.n_levels == 3 and t.shape == (2, 8, 4) and t.n_lanes == 64
+    assert t.hierarchy == "three-level"
+    assert t.grid == (16, 4)                  # pods fold into n_clusters
+    assert t.cluster_axis == ("pod", "cluster") and t.lane_axis == "lane"
+    assert t.strides() == (32, 4, 1)
+    assert t.coords(37) == (1, 1, 1)
+    assert t.wire_labels() == ("pod", "inter", "intra")
+    assert t.hop_lat("pod") == 8.0 and t.hop_lat("intra") == 2.0
+
+
+def test_three_level_link_and_slide_pricing():
+    t = Topology.from_levels([("pod", 2, 8.0), ("cluster", 8, 4.0),
+                              ("lane", 4, 2.0)])
+    assert t.link_level(0) == "intra"         # inside a cluster
+    assert t.link_level(3) == "inter"         # cluster boundary
+    assert t.link_level(31) == "pod"          # pod boundary
+    assert t.link_level(63) == "pod"          # the wrap link
+    # slide-by-1's critical lane crosses the pod boundary
+    assert t.slide_level(1) == "pod"
+    # per-level critical-path decomposition: 5 hops = 1 pod + 1 cluster + 3
+    assert t.slide_steps(5) == (1, 1, 3)
+    assert t.slide_cost(5) == 8.0 + 4.0 + 3 * 2.0
+    assert t.with_hierarchy("flat").slide_cost(5) == 5 * 8.0
+
+
+def test_three_level_tree_wire_cycles():
+    t = Topology.from_levels([("pod", 2, 8.0), ("cluster", 8, 4.0),
+                              ("lane", 4, 2.0)])
+    # one log-tree per level, each on its own wires
+    assert t.tree_wire_cycles() == 1 * 8.0 + (1 + 2 + 4) * 4.0 + (1 + 2) * 2.0
+    assert t.with_hierarchy("flat").tree_wire_cycles() == 63 * 8.0
+
+
+def test_hierarchy_name_must_match_depth():
+    assert hier_name(3) == "three-level"
+    with pytest.raises(ValueError):
+        Topology.from_levels([("pod", 2, 8.0), ("cluster", 8, 4.0),
+                              ("lane", 4, 2.0)], hierarchy="two-level")
+    with pytest.raises(ValueError):
+        Topology(16, 4, hierarchy="three-level")
+    # flat always parses, at any depth
+    assert parse_topology("2x8x4:flat").hierarchy == "flat"
+
+
+def test_parse_topology_n_level():
+    t = parse_topology("2x8x4")
+    assert t.shape == (2, 8, 4) and t.hierarchy == "three-level"
+    assert t.axis_names == ("pod", "cluster", "lane")
+    assert [l.hop_lat for l in t.levels] == [8.0, 4.0, 2.0]  # doubles outward
+    t4 = parse_topology("2x2x2x8")
+    assert t4.n_levels == 4 and t4.hierarchy == "four-level"
+    with pytest.raises(ValueError):
+        parse_topology("2x8x4", level_axes=("a", "b"))       # wrong arity
+
+
+def test_level_axis_names_must_be_unique():
+    with pytest.raises(ValueError):
+        Topology.from_levels([("x", 2, 4.0), ("x", 2, 2.0)])
+
+
+def test_params_compose_three_level_topology():
+    p = araxl_params(64, lanes_per_cluster=4, n_pods=2)
+    t = p.topology
+    assert t.levels == (Level("pod", 2, p.pod_hop),
+                        Level("cluster", 8, p.hop_lat),
+                        Level("lane", 4, p.intra_hop))
+    assert p.n_clusters == 16 and p.clusters_per_pod == 8
+    # the hierarchy claim recurses: pods shorten the cluster log-tree
+    assert p.red_tree_lat() < araxl_params(64).red_tree_lat()
+    assert p.red_tree_lat() < p.with_hierarchy("flat").red_tree_lat()
+    with pytest.raises(ValueError):
+        araxl_params(64, lanes_per_cluster=4, n_pods=3)      # 3 !| 16
+
+
+# ---------------------------------------------------------------------------
+# Regression: two-level parse/pricing byte-identical to the PR 2 calibration
+# ---------------------------------------------------------------------------
+
+def test_two_level_calibration_matches_bench_sim_json():
+    """The frozen BENCH_sim.json entries are the PR 2 operating points; the
+    enum -> levels refactor must reproduce them bit-for-bit."""
+    bench = json.loads((ROOT / "BENCH_sim.json").read_text())
+    cal = bench["red_tree_lat_64"]
+    p = araxl_params(64)
+    assert p.red_tree_lat() == cal["two-level"] == 106.0
+    assert p.with_hierarchy("flat").red_tree_lat() == cal["flat"] == 286.0
+    for tag, entry in bench["fig6_grid_64"].items():
+        C, L = (int(x) for x in tag[1:].split("xL"))
+        q = araxl_params(64, lanes_per_cluster=L)
+        assert q.topology.grid == (C, L)
+        assert q.red_tree_lat() == entry["red_tree_lat"], tag
+
+
+def test_two_level_parse_is_byte_identical_to_legacy_ctor():
+    assert parse_topology("16x4:two-level") == Topology(16, 4)
+    assert parse_topology("16x4:flat") == Topology(16, 4, hierarchy="flat")
+    d = Topology(16, 4).describe()
+    # the PR 2 describe() keys survive (artifact compatibility)
+    for key in ("n_clusters", "lanes_per_cluster", "n_lanes", "hierarchy",
+                "cluster_axis", "lane_axis", "intra_hop_lat",
+                "inter_hop_lat"):
+        assert key in d, key
+    assert d["n_clusters"] == 16 and d["intra_hop_lat"] == 2.0
 
 
 # ---------------------------------------------------------------------------
