@@ -27,6 +27,9 @@ Sections:
          (reduce / allgather / reduce-scatter / staged GLSU, 8 fake devices,
          both C·L factorizations — the §III-B.4 hierarchy ablation)
   roof   roofline summary per dry-run cell (requires results/dryrun/*.json)
+  perf   launch-strategy comparison (baseline / fsdp_pure / fsdp_hier):
+         merges the per-level collective pricing of results/perf/*.json
+         into BENCH_sim.json — the pod-ring gradient-sync ablation
 
 Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
            [--hierarchy flat|two-level|both] [--json PATH | --no-json]
@@ -267,14 +270,56 @@ def bench_roofline():
               f"mem={rec['mem_per_device']['resident_model_gib']:.1f}GiB")
 
 
+def bench_perf():
+    """Merge the launch-strategy roofline records (produced by
+    ``python -m repro.launch.perf ... --mesh multi``) into BENCH_sim.json:
+    per strategy, the per-level collective seconds and wire bytes — the
+    end-to-end fig-7-style ablation of what the pod ring actually carries
+    under flat vs hierarchical gradient sync."""
+    outdir = ROOT / "results/perf"
+    cells = sorted(outdir.glob("*.json")) if outdir.exists() else []
+    if not cells:
+        print("perf/none,0,run `python -m repro.launch.perf --arch llama3-8b"
+              " --shape train_4k --mesh multi --strategy baseline"
+              " --strategy fsdp_pure --strategy fsdp_hier` first")
+        return
+    perf = BENCH.setdefault("perf", {})
+    for f in cells:
+        if "__smoke" in f.stem:
+            # CI-scale smoke artifacts never belong in the calibration file
+            print(f"perf/skip-smoke/{f.stem},0,not merged")
+            continue
+        rec = json.loads(f.read_text())
+        strat = rec.get("strategy", f.stem)
+        mesh = rec.get("mesh", "?")
+        r = rec["roofline"]
+        entry = {
+            "collective_s": r["collective_s"],
+            "bottleneck": r["bottleneck"],
+            "mfu_upper_bound": round(r.get("mfu_upper_bound", 0.0), 4),
+        }
+        if "collective_s_by_level" in r:
+            entry["collective_s_by_level"] = r["collective_s_by_level"]
+            entry["collective_s_flat_hw"] = r["collective_s_flat_hw"]
+            entry["wire_bytes_by_level"] = \
+                rec["per_device"]["wire_bytes_by_level"]
+        key = f"{rec['arch']}__{rec['shape']}__{mesh}"
+        perf.setdefault(key, {})[strat] = entry
+        lv = r.get("collective_s_by_level", {})
+        lv_txt = " ".join(f"{k}={v:.5f}s" for k, v in lv.items())
+        print(f"perf/{key}/{strat},0,coll={r['collective_s']:.5f}s {lv_txt} "
+              f"bound={r['bottleneck']}")
+
+
 SECTIONS = {
     "fig6": bench_fig6, "fig7": bench_fig7, "tab1": bench_tab1,
     "tab2": bench_tab2, "tab3": bench_tab3, "kern": bench_kernels,
     "ring": bench_ring, "coll": bench_collectives, "roof": bench_roofline,
+    "perf": bench_perf,
 }
 
 #: sections whose derived numbers land in BENCH_sim.json
-SIM_SECTIONS = ("fig6", "fig7", "tab1", "tab2", "tab3")
+SIM_SECTIONS = ("fig6", "fig7", "tab1", "tab2", "tab3", "perf")
 
 
 def _deep_merge(base: dict, new: dict) -> dict:

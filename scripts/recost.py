@@ -5,13 +5,14 @@ import json, pathlib, sys, time
 sys.path.insert(0, "src")
 from repro.configs import SHAPES, get_config
 from repro.launch import dryrun as dr
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, production_topology
 from repro.roofline.analysis import (HW, collective_bytes, extrapolate,
                                      memory_model_bytes, parse_collectives,
                                      roofline_terms)
 
 kinds = set(sys.argv[1:]) or {"prefill"}
 mesh = make_production_mesh()
+topo = production_topology()
 outdir = pathlib.Path("results/dryrun")
 for f in sorted(outdir.glob("*pod16x16.json")):
     rec = json.loads(f.read_text())
@@ -25,6 +26,8 @@ for f in sorted(outdir.glob("*pod16x16.json")):
     for n in (1, 2):
         lo, co = dr.lower_cell(dr._variant(cfg, n), cshape, mesh, n_micro=1)
         ca = co.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+            ca = ca[0]
         colls = parse_collectives(co.as_text())
         costs[n] = {"flops": float(ca.get("flops", 0.0)),
                     "bytes": float(ca.get("bytes accessed", 0.0)),
@@ -36,7 +39,7 @@ for f in sorted(outdir.glob("*pod16x16.json")):
     wire = nm * extrapolate(costs[1]["wire"]["total"], costs[2]["wire"]["total"], L)
     rec["per_device"] = {"flops": flops, "bytes": bytes_, "wire_bytes": wire}
     rec["roofline"] = roofline_terms(flops, bytes_, wire)
-    mm = memory_model_bytes(cfg, shape, n_dev, nm)
+    mm = memory_model_bytes(cfg, shape, n_dev, nm, topology=topo)
     rec["roofline"]["memory_s_hlo_upper"] = rec["roofline"]["memory_s"]
     rec["roofline"]["memory_s"] = mm / HW["hbm_bw"]
     terms = {k: rec["roofline"][k] for k in ("compute_s","memory_s","collective_s")}

@@ -44,14 +44,17 @@ import jax.numpy as jnp
 from repro.configs import SHAPES, get_config, list_archs
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.launch.mesh import (make_production_mesh, parse_launch_topology,
-                               topology_tag)
+                               production_topology, topology_tag)
 from repro.launch.specs import input_shardings, input_specs
 from repro.models import lm
 from repro.parallel.sharding import (abstract_params, default_rules,
                                      param_shardings)
-from repro.roofline.analysis import (HW, collective_bytes, extrapolate,
-                                     memory_model_bytes, parse_collectives,
-                                     resident_model_bytes, roofline_terms)
+from repro.roofline.analysis import (HW, collective_bytes,
+                                     collective_level_bytes, extrapolate,
+                                     level_wire_seconds, memory_model_bytes,
+                                     parse_collectives, resident_model_bytes,
+                                     roofline_terms, wire_seconds)
+from repro.topology import Topology
 from repro.train import OptConfig, TrainState, make_train_step
 from repro.train.optimizer import opt_state_defs
 
@@ -104,10 +107,17 @@ def _opt_cfg(cfg: ModelConfig) -> OptConfig:
 
 
 def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
-               n_micro: int | None = None):
-    """Returns (lowered, compiled) for one cell on one mesh."""
+               n_micro: int | None = None, rules=None, grad_sync=None):
+    """Returns (lowered, compiled) for one cell on one mesh.
+
+    ``rules`` overrides the default sharding rules (a plain argument — the
+    §Perf strategies pass their rule tables here instead of monkey-patching
+    :func:`build_rules`); ``grad_sync`` is an optional gradient-sync hook
+    forwarded to :func:`repro.train.make_train_step`.
+    """
     cfg = dataclasses.replace(cfg, loss_chunk=LOSS_CHUNK)
-    rules = build_rules(cfg, shape, mesh)
+    if rules is None:
+        rules = build_rules(cfg, shape, mesh)
     specs = input_specs(cfg, shape)
     shard = input_shardings(cfg, shape, rules)
     pdefs = lm.model_defs(cfg)
@@ -124,7 +134,7 @@ def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
             nm = n_micro if n_micro is not None else \
                 n_microbatches(cfg, shape, mesh)
             step = make_train_step(cfg, rules, ocfg, n_microbatches=nm,
-                                   acc_dtype=acc_dt)
+                                   acc_dtype=acc_dt, grad_sync=grad_sync)
             fn = jax.jit(step, in_shardings=(state_sh, shard),
                          out_shardings=(state_sh, None),
                          donate_argnums=(0,))
@@ -174,16 +184,30 @@ def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
 
 
 def analyse_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
-                 mesh_name: str) -> dict:
+                 mesh_name: str, *, topology: Topology | None = None,
+                 rules=None, n_micro: int | None = None,
+                 grad_sync=None) -> dict:
+    """Lower + compile one cell and derive its roofline record.
+
+    ``topology`` prices the collectives per level (the record gains
+    ``roofline.collective_s_by_level`` and ``per_device.wire_bytes_by_level``;
+    without one the historical flat pricing applies).  ``rules`` /
+    ``n_micro`` / ``grad_sync`` are explicit strategy overrides (no
+    module-global mutation): sharding-rule table, microbatch count, and the
+    trainer's gradient-sync hook.
+    """
     n_dev = mesh.devices.size
     t0 = time.time()
     rec = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
            "devices": int(n_dev), "kind": shape.kind}
+    if topology is not None:
+        rec["topology"] = topology.describe()
 
     # full compile: memory truth + sharding coherence
-    nm = n_microbatches(cfg, shape, mesh)
+    nm = n_micro if n_micro is not None else n_microbatches(cfg, shape, mesh)
     rec["n_microbatches"] = nm
-    lowered, compiled = lower_cell(cfg, shape, mesh, n_micro=nm)
+    lowered, compiled = lower_cell(cfg, shape, mesh, n_micro=nm, rules=rules,
+                                   grad_sync=grad_sync)
     ma = compiled.memory_analysis()
     # CPU backend's peak_memory_in_bytes omits the temp arena; the honest
     # per-device residency is args + temps + (outputs - donated aliases).
@@ -194,14 +218,17 @@ def analyse_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
         "outputs_gib": ma.output_size_in_bytes / 2**30,
         "temps_gib": ma.temp_size_in_bytes / 2**30,
         "aliased_gib": ma.alias_size_in_bytes / 2**30,
-        "peak_gib": ma.peak_memory_in_bytes / 2**30,
+        # this jax's CPU CompiledMemoryStats has no peak; fall back to the
+        # live-set estimate rather than dying on the backend difference
+        "peak_gib": getattr(ma, "peak_memory_in_bytes", live) / 2**30,
         "total_gib": live / 2**30,
     }
     # CPU arenas double-buffer where TPU aliases donated state: report the
     # measured arena as the upper bound and analytic TPU residency as the
     # fit criterion (EXPERIMENTS.md §Dry-run documents both).
     resident = resident_model_bytes(cfg, shape, n_dev, nm,
-                                    ma.argument_size_in_bytes)
+                                    ma.argument_size_in_bytes,
+                                    topology=topology)
     rec["mem_per_device"]["resident_model_gib"] = resident / 2**30
     rec["fits_16gib_hbm"] = bool(resident < 16 * 2**30)
     rec["cpu_arena_exceeds"] = bool(live >= 16 * 2**30)
@@ -213,14 +240,19 @@ def analyse_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
     costs = {}
     cshape = _cost_shape(shape, nm)
     for n in (1, 2):
-        lo, co = lower_cell(_variant(cfg, n), cshape, mesh, n_micro=1)
+        lo, co = lower_cell(_variant(cfg, n), cshape, mesh, n_micro=1,
+                            rules=rules, grad_sync=grad_sync)
         ca = co.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+            ca = ca[0]
         colls = parse_collectives(co.as_text())
         costs[n] = {
             "flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),
             "wire": collective_bytes(colls),
         }
+        if topology is not None:
+            costs[n]["wire_levels"] = collective_level_bytes(colls, topology)
         del co, lo
     L = cfg.n_periods
     flops = nm * extrapolate(costs[1]["flops"], costs[2]["flops"], L)
@@ -229,11 +261,26 @@ def analyse_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
                             costs[2]["wire"]["total"], L)
     rec["per_device"] = {"flops": flops, "bytes": bytes_, "wire_bytes": wire}
     rec["collectives_p2"] = {k: v for k, v in costs[2]["wire"].items()}
-    rec["roofline"] = roofline_terms(flops, bytes_, wire)
+    coll_s = None
+    if topology is not None:
+        # per-level wire bytes extrapolate level by level (each level's
+        # traffic scales with depth exactly like the total does)
+        wire_by_level = {
+            lab: nm * extrapolate(costs[1]["wire_levels"][lab],
+                                  costs[2]["wire_levels"][lab], L)
+            for lab in topology.wire_labels()}
+        secs = level_wire_seconds(wire_by_level, topology)
+        coll_s = secs.pop("total")
+        rec["per_device"]["wire_bytes_by_level"] = wire_by_level
+    rec["roofline"] = roofline_terms(flops, bytes_, wire, collective_s=coll_s)
+    if topology is not None:
+        rec["roofline"]["collective_s_by_level"] = secs
+        # the historical single-class price, for the flat-vs-level ablation
+        rec["roofline"]["collective_s_flat_hw"] = wire_seconds(wire)
     # fusion-aware analytic memory second opinion (the CPU HLO byte count
     # has no TPU fusion: treat it as an upper bound, the model as the
     # realistic term; bottleneck classification uses the model)
-    mm = memory_model_bytes(cfg, shape, n_dev, nm)
+    mm = memory_model_bytes(cfg, shape, n_dev, nm, topology=topology)
     rec["roofline"]["memory_s_hlo_upper"] = rec["roofline"]["memory_s"]
     rec["roofline"]["memory_s"] = mm / HW["hbm_bw"]
     terms = {k: rec["roofline"][k]
@@ -272,22 +319,24 @@ def main():
     outdir = pathlib.Path(args.out)
     outdir.mkdir(parents=True, exist_ok=True)
 
-    topo = None
     if args.topology is not None:
         if args.mesh != "single":
             ap.error("--topology replaces the pod mesh entirely; drop "
                      "--mesh (or run the pod meshes in a separate invocation)")
         topo = parse_launch_topology(args.topology)
         mesh_plan = [(make_production_mesh(topology=topo),
-                      topology_tag(topo))]
+                      topology_tag(topo), topo)]
     else:
         meshes = {"single": [False], "multi": [True],
                   "both": [False, True]}[args.mesh]
+        # every cell carries its Topology: `--mesh multi` prices the true
+        # three-level production_topology(multi_pod=True) per level
         mesh_plan = [(make_production_mesh(multi_pod=m),
-                      "pod2x16x16" if m else "pod16x16") for m in meshes]
+                      "pod2x16x16" if m else "pod16x16",
+                      production_topology(multi_pod=m)) for m in meshes]
 
     failures = []
-    for mesh, mname in mesh_plan:
+    for mesh, mname, topo in mesh_plan:
         for arch in archs:
             cfg = get_config(arch)
             for sname in shapes:
@@ -303,9 +352,8 @@ def main():
                     print(f"[cached] {path}")
                     continue
                 try:
-                    rec = analyse_cell(cfg, shape, mesh, mname)
-                    if topo is not None:
-                        rec["topology"] = topo.describe()
+                    rec = analyse_cell(cfg, shape, mesh, mname,
+                                       topology=topo)
                     path.write_text(json.dumps(rec, indent=2))
                     r = rec["roofline"]
                     print(f"[ok] {arch} x {sname} x {mname}: "

@@ -2,11 +2,19 @@
 
 Each named STRATEGY is one candidate change against the paper-faithful
 baseline; the runner produces the same per-cell roofline record as
-launch.dryrun so before/after is directly comparable.
+launch.dryrun so before/after is directly comparable.  Strategy overrides
+are plain arguments on ``dryrun.analyse_cell`` (``rules=`` / ``n_micro=`` /
+``grad_sync=``) — no module-global mutation.
 
   baseline    the dry-run configuration (TP over `model` + FSDP + SP)
   fsdp_pure   no TP: params fully sharded over ALL axes, batch over all axes
               (ZeRO-3 / pure-DP; kills the per-layer TP all-reduces)
+  fsdp_hier   pod-local FSDP (HSDP): params sharded over the INNER topology
+              levels only and replicated across the outermost (pod) ring;
+              the gradient sync reduce-scatters level by level — inner rings
+              first, pod ring last, like core.ring's hierarchical
+              reduce-scatter — via the make_grad_sync hook, so the pod
+              wires only ever carry the 1/|inner|-sized gradient shard
   moe_a2a     token all-to-all expert parallelism (GLSU shuffle) instead of
               replicated-token psum-combine
   nm_half/nm1 fewer, larger microbatches (fewer FSDP gathers, more act mem)
@@ -14,6 +22,8 @@ launch.dryrun so before/after is directly comparable.
 Usage:
   python -m repro.launch.perf --arch llama3-8b --shape train_4k \
       --strategy baseline --strategy fsdp_pure --out results/perf
+  python -m repro.launch.perf --arch llama3-8b --shape train_4k --mesh multi \
+      --strategy fsdp_pure --strategy fsdp_hier       # pod-ring ablation
 """
 import os
 
@@ -25,30 +35,34 @@ import argparse
 import dataclasses
 import json
 import pathlib
-import time
 import traceback
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import SHAPES, get_config
+from repro.configs import SHAPES, get_config, get_smoke_config
 from repro.launch import dryrun as dr
 from repro.launch.mesh import (make_production_mesh, parse_launch_topology,
-                               topology_tag)
-from repro.parallel.sharding import ShardingRules, default_rules
+                               production_topology, topology_tag)
+from repro.parallel.sharding import ShardingRules
 from repro.topology import Topology
+from repro.train import make_grad_sync
+
+
+def _all_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+
+
+def _axes_size(mesh, axes) -> int:
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return total
 
 
 def _fsdp_pure_rules(mesh, cfg, shape):
     """Map batch AND fsdp over every mesh axis; no TP ('model' unused)."""
-    names = tuple(mesh.axis_names)
-    all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
-    total = 1
-    for a in all_axes:
-        total *= mesh.shape[a]
+    all_axes = _all_axes(mesh)
     rules = {
-        "batch": all_axes if shape.global_batch % total == 0 else
-        tuple(a for a in ("pod", "data") if a in mesh.shape),
+        "batch": all_axes if shape.global_batch % _axes_size(mesh, all_axes)
+        == 0 else tuple(a for a in ("pod", "data") if a in mesh.shape),
         "seq": None,
         "fsdp": all_axes,
         "model": None,
@@ -59,53 +73,56 @@ def _fsdp_pure_rules(mesh, cfg, shape):
     return ShardingRules(mesh, rules)
 
 
-def apply_strategy(strategy: str, cfg, shape, mesh):
-    """Returns (cfg', rules_override, n_micro_override)."""
+def _fsdp_hier_rules(mesh, cfg, shape, topology: Topology):
+    """fsdp_pure, made pod-local: params shard over the *inner* topology
+    levels only (each pod holds a full shard-group replica), so every FSDP
+    all-gather stays off the pod ring and the cross-pod gradient sync runs
+    on 1/|inner|-sized shards.  Every other rule — batch included — is the
+    fsdp_pure mapping, so the compute side of the two strategies is
+    identical and the ablation isolates the sync schedule."""
+    inner = tuple(a for l in topology.levels[1:] for a in l.axes
+                  if a in mesh.shape)
+    if not inner:                      # single-level machine: nothing inner
+        inner = _all_axes(mesh)
+    base = _fsdp_pure_rules(mesh, cfg, shape)
+    return ShardingRules(mesh, {**base.rules, "fsdp": inner})
+
+
+def apply_strategy(strategy: str, cfg, shape, mesh, topology: Topology):
+    """Returns (cfg', rules_override, n_micro_override, grad_sync)."""
     if strategy == "baseline":
-        return cfg, None, None
+        return cfg, None, None, None
     if strategy == "fsdp_pure":
-        return cfg, _fsdp_pure_rules(mesh, cfg, shape), 1
+        return cfg, _fsdp_pure_rules(mesh, cfg, shape), 1, None
+    if strategy == "fsdp_hier":
+        rules = _fsdp_hier_rules(mesh, cfg, shape, topology)
+        return cfg, rules, 1, make_grad_sync(cfg, rules)
     if strategy == "moe_a2a":
-        return dataclasses.replace(cfg, moe_impl="a2a"), None, None
+        return dataclasses.replace(cfg, moe_impl="a2a"), None, None, None
     if strategy == "nm_half":
         nm = max(1, dr.n_microbatches(cfg, shape, mesh) // 2)
-        return cfg, None, nm
+        return cfg, None, nm, None
     if strategy == "nm1":
-        return cfg, None, 1
+        return cfg, None, 1, None
     if strategy == "moe_a2a_nm_half":
         nm = max(1, dr.n_microbatches(cfg, shape, mesh) // 2)
-        return dataclasses.replace(cfg, moe_impl="a2a"), None, nm
+        return dataclasses.replace(cfg, moe_impl="a2a"), None, nm, None
     raise ValueError(strategy)
 
 
 def analyse(arch: str, shape_name: str, strategy: str, multi: bool = False,
-            topology: Topology | None = None):
-    cfg = get_config(arch)
+            topology: Topology | None = None, smoke: bool = False):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi, topology=topology)
-    mname = (topology_tag(topology) if topology is not None else
+    topo = topology if topology is not None else \
+        production_topology(multi_pod=multi)
+    mname = (topology_tag(topo) if topology is not None else
              "pod2x16x16" if multi else "pod16x16")
-    cfg, rules_override, nm_override = apply_strategy(strategy, cfg, shape,
-                                                      mesh)
-    # monkey-patch the dryrun cell builder's rules when overridden
-    if rules_override is not None:
-        orig = dr.build_rules
-        dr.build_rules = lambda *a, **k: rules_override
-    try:
-        if nm_override is not None:
-            orig_nm = dr.n_microbatches
-            dr.n_microbatches = lambda *a, **k: nm_override
-        try:
-            rec = dr.analyse_cell(cfg, shape, mesh, mname)
-        finally:
-            if nm_override is not None:
-                dr.n_microbatches = orig_nm
-    finally:
-        if rules_override is not None:
-            dr.build_rules = orig
+    cfg, rules, nm, gsync = apply_strategy(strategy, cfg, shape, mesh, topo)
+    rec = dr.analyse_cell(cfg, shape, mesh, mname, topology=topo,
+                          rules=rules, n_micro=nm, grad_sync=gsync)
     rec["strategy"] = strategy
-    if topology is not None:
-        rec["topology"] = topology.describe()
     return rec
 
 
@@ -114,36 +131,58 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
     ap.add_argument("--strategy", action="append", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single",
+                    help="production pod mesh (multi = the three-level "
+                         "2x16x16 machine)")
     ap.add_argument("--topology", default=None,
                     metavar="[P x]CxL[:hierarchy]",
                     help="override the mesh with an explicit Topology "
                          "(clusters on `data`, lanes on `model`; a third "
                          "leading size adds the `pod` ring level)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family smoke config (CI-sized "
+                         "compiles; artifacts are tagged by the smoke name)")
     ap.add_argument("--out", default="results/perf")
     args = ap.parse_args()
+    if args.topology is not None and args.mesh != "single":
+        ap.error("--topology replaces the pod mesh entirely; drop --mesh")
     topo = (parse_launch_topology(args.topology)
             if args.topology is not None else None)
-    tsuffix = f"__{topology_tag(topo)}" if topo is not None else ""
+    tsuffix = f"__{topology_tag(topo)}" if topo is not None else \
+        ("__pod2x16x16" if args.mesh == "multi" else "")
+    if args.smoke:
+        tsuffix += "__smoke"
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
+    failures = []
     for strat in args.strategy:
         path = out / f"{args.arch}__{args.shape}__{strat}{tsuffix}.json"
         if path.exists():
             print(f"[cached] {path}")
             continue
         try:
-            rec = analyse(args.arch, args.shape, strat, topology=topo)
+            rec = analyse(args.arch, args.shape, strat,
+                          multi=args.mesh == "multi", topology=topo,
+                          smoke=args.smoke)
             path.write_text(json.dumps(rec, indent=2))
             r = rec["roofline"]
+            lv = r.get("collective_s_by_level", {})
+            lv_txt = " ".join(f"{k}={v:.4f}s" for k, v in lv.items())
             print(f"[ok] {args.arch} x {args.shape} x {strat}: "
                   f"compute={r['compute_s']:.3f}s mem={r['memory_s']:.3f}s "
-                  f"coll={r['collective_s']:.3f}s bound={r['bottleneck']} "
+                  f"coll={r['collective_s']:.3f}s [{lv_txt}] "
+                  f"bound={r['bottleneck']} "
                   f"mfu_ub={r['mfu_upper_bound']:.3f} "
                   f"res={rec['mem_per_device']['resident_model_gib']:.1f}GiB",
                   flush=True)
         except Exception as e:
+            # keep sweeping: later strategies still produce their artifacts
+            failures.append(strat)
             print(f"[FAIL] {strat}: {e}")
             traceback.print_exc()
+    if failures:
+        print(f"{len(failures)} strategy failures: {failures}")
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

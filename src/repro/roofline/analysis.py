@@ -3,7 +3,8 @@
     compute    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)      [per-chip FLOPs:
                  cost_analysis() of the SPMD-partitioned module is per-device]
     memory     = HLO_bytes / (chips x 819 GB/s)
-    collective = wire_bytes / 50 GB/s per link (ring factors below)
+    collective = per-level wire seconds (see below); flat fallback
+                 wire_bytes / 50 GB/s per link
 
 collective_bytes is NOT in cost_analysis: we parse the compiled HLO text and
 sum operand/result sizes of every all-gather / all-reduce / reduce-scatter /
@@ -15,6 +16,23 @@ all-to-all / collective-permute, with ring-algorithm wire factors:
     all-to-all      (n-1)/n x operand_bytes
     collective-perm operand_bytes               (one neighbour hop)
 
+Per-level pricing (the AraXL claim carried to the launch layer): a
+collective's ``replica_groups`` name the devices it spans; because the
+production mesh has one axis per :class:`repro.topology.Topology` level and
+XLA partition ids are mesh-flat (outer-major) positions, the group maps
+back onto the level(s) it crosses (:func:`group_level_extents`).  A ring
+schedule run hierarchically then carries, on level *i*'s wires (extent
+``e_i``, outer-extent product ``O_i``),
+
+    factor_i = wire_factor(e_i) / O_i          (AG / RS / AR / A2A)
+
+of the payload — the outer rings only ever see already-aggregated
+superchunks (this telescopes back to the flat ``(n-1)/n`` total, so bytes
+are conserved; only their wire class changes).  Each level's bytes are
+priced by its ``Level.wire_bw``; the flat model (``hierarchy="flat"``)
+prices everything at the outermost wire class and is bit-identical to the
+historical ``wire_seconds()`` for single-level topologies.
+
 `scan` caveat (DESIGN.md §8): XLA cost analysis counts a while body ONCE.
 The dry-run therefore compiles 1-period and 2-period model variants and
 extrapolates: total(L) = f(1) + (L-1) x (f(2) - f(1)).
@@ -22,10 +40,13 @@ extrapolates: total(L) = f(1) + (L-1) x (f(2) - f(1)).
 from __future__ import annotations
 
 import dataclasses
+import math
 import re
 from typing import Any
 
 import numpy as np
+
+from repro.topology import Topology
 
 HW = {
     "peak_flops": 197e12,      # bf16 per chip
@@ -48,7 +69,9 @@ _SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|"
                        r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
 
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([0-9,{} ]*)\}")
 
 
 def _shape_bytes(type_str: str) -> int:
@@ -63,8 +86,24 @@ def _shape_bytes(type_str: str) -> int:
     return total
 
 
+def _iota_first_group(n_groups: int, group_size: int, dims: str,
+                      perm: str | None) -> tuple[int, ...]:
+    """Expand the first group of an iota replica-group spec
+    ``[N,S]<=[d0,d1,...]T(p...)``: reshape 0..N*S-1 to ``dims``, transpose
+    by ``perm``, flatten, split into N rows of S."""
+    shape = tuple(int(d) for d in dims.split(","))
+    ids = np.arange(n_groups * group_size).reshape(shape)
+    if perm:
+        ids = ids.transpose(tuple(int(p) for p in perm.split(",")))
+    return tuple(int(i) for i in ids.reshape(-1)[:group_size])
+
+
 def parse_collectives(hlo_text: str) -> list[dict]:
-    """Every collective op in the module: kind, result bytes, group size."""
+    """Every collective op in the module: kind, result bytes, group size,
+    plus the structure needed to map it onto topology levels — ``members``
+    (the first replica group's device ids, groups are level-congruent) for
+    the grouped collectives and ``pairs`` (source→target device pairs) for
+    collective-permute."""
     out = []
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
@@ -74,14 +113,30 @@ def parse_collectives(hlo_text: str) -> list[dict]:
             continue                        # counted at -start
         kind = m.group(2)
         rbytes = _shape_bytes(m.group(1))
+        members = pairs = None
         g = _GROUPS_IOTA_RE.search(line)
         if g:
             group = int(g.group(2))
+            members = _iota_first_group(int(g.group(1)), group,
+                                        g.group(3), g.group(4))
         else:
             g2 = _GROUPS_RE.search(line)
-            group = len(g2.group(1).split(",")) if g2 else 1
-        out.append({"kind": kind, "bytes": rbytes, "group": group,
-                    "line": line.strip()[:160]})
+            if g2:
+                members = tuple(int(x) for x in g2.group(1).split(",") if x)
+                group = len(members)
+            else:
+                group = 1
+        p = _PAIRS_RE.search(line)
+        if p and p.group(1).strip():
+            flat = [int(x) for x in re.findall(r"\d+", p.group(1))]
+            pairs = tuple(zip(flat[0::2], flat[1::2]))
+        rec = {"kind": kind, "bytes": rbytes, "group": group,
+               "line": line.strip()[:160]}
+        if members is not None:
+            rec["members"] = members
+        if pairs is not None:
+            rec["pairs"] = pairs
+        out.append(rec)
     return out
 
 
@@ -108,14 +163,142 @@ def collective_bytes(colls: list[dict]) -> dict:
 
 
 def wire_seconds(wire_bytes: float) -> float:
+    """Flat pricing: every byte rides the historical single-class link."""
     return wire_bytes / HW["ici_bw"]
 
 
+# ---------------------------------------------------------------------------
+# HLO replica-group -> topology-level mapping (per-level pricing)
+# ---------------------------------------------------------------------------
+
+def group_level_extents(members, topology: Topology) -> tuple[int, ...]:
+    """Per-level extents (distinct level coordinates) one replica group
+    spans, outermost first.
+
+    XLA partition ids are mesh-flat outer-major positions, i.e. exactly the
+    flattened ring positions :meth:`Topology.coords` decodes (the production
+    mesh has one axis per level).  A mesh-axis-aligned group is a subgrid,
+    so ``prod(extents) == len(members)``; a group that is not axis-aligned
+    (or references devices outside the topology) falls back to a flat ring
+    over the whole group at the outermost spanned level — the conservative
+    long-wire attribution.
+    """
+    n = topology.n_lanes
+    if not members or max(members) >= n:
+        return (len(members or ()),) + (1,) * (topology.n_levels - 1)
+    coords = [topology.coords(m) for m in members]
+    extents = tuple(len({c[i] for c in coords})
+                    for i in range(topology.n_levels))
+    if math.prod(extents) != len(members):
+        # degenerate duplicates (all extents 1) land on the outermost level
+        outermost = next((i for i, e in enumerate(extents) if e > 1), 0)
+        extents = tuple(len(members) if i == outermost else 1
+                        for i in range(topology.n_levels))
+    return extents
+
+
+def _ring_level_factors(kind: str, extents) -> list[float]:
+    """Per-level wire factors (fraction of payload bytes on each level's
+    wires, outermost first) of the hierarchical ring schedule.
+
+    Level i moves ``wire_factor(e_i) / O_i`` of the payload, where ``O_i``
+    is the product of the *outer* extents: the outer rings exchange whole
+    superchunks ((e-1)/e of the payload), each inner ring only its level's
+    1/O_i-sized slice.  Telescopes to the flat ``(n-1)/n`` (2(n-1)/n for
+    all-reduce), so total wire bytes are conserved — only their class moves.
+    """
+    f = _WIRE_FACTOR[kind]
+    out, outer = [], 1
+    for e in extents:
+        out.append(f(max(1, e)) / outer if e > 1 else 0.0)
+        outer *= max(1, e)
+    return out
+
+
+def _permute_level_factors(pairs, topology: Topology) -> list[float]:
+    """Per-level factors for collective-permute: the fraction of pairs whose
+    source→target path crosses each level (outermost differing coordinate).
+    The factors always sum to exactly 1.0 — matching the flat _WIRE_FACTOR
+    convention that a permute charges the full operand once per op — so
+    per-level attribution only reclassifies those bytes, never rescales
+    them."""
+    counts = [0] * topology.n_levels
+    n = topology.n_lanes
+    if not pairs:
+        # no pair structure parsed: a neighbour hop rides the innermost ring
+        out = [0.0] * topology.n_levels
+        out[-1] = 1.0
+        return out
+    for s, d in pairs:
+        if max(s, d) >= n:
+            # pair references devices outside this topology (mesh mismatch):
+            # charge the outermost (long) wires, like group_level_extents
+            counts[0] += 1
+            continue
+        cs, cd = topology.coords(s), topology.coords(d)
+        lvl = next((i for i in range(topology.n_levels) if cs[i] != cd[i]),
+                   topology.n_levels - 1)
+        counts[lvl] += 1
+    return [c / len(pairs) for c in counts]
+
+
+def collective_level_bytes(colls: list[dict], topology: Topology) -> dict:
+    """Aggregate per-device wire bytes by topology wire-class label
+    (:meth:`Topology.wire_labels`, outermost first), plus ``total``.
+
+    Under ``hierarchy="flat"`` every byte is attributed to the outermost
+    label — the flattened-ring model the paper argues against.
+    """
+    labels = topology.wire_labels()
+    by_level = {lab: 0.0 for lab in labels}
+    total = 0.0
+    for c in colls:
+        kind = c["kind"]
+        if topology.hierarchy == "flat":
+            wire = c["bytes"] * _WIRE_FACTOR[kind](max(1, c["group"]))
+            by_level[labels[0]] += wire
+            total += wire
+            continue
+        if kind == "collective-permute":
+            factors = _permute_level_factors(c.get("pairs"), topology)
+        elif "members" in c:
+            ext = group_level_extents(c["members"], topology)
+            factors = _ring_level_factors(kind, ext)
+        else:
+            # size-only parse: attribute to the outermost (long) wires
+            factors = [0.0] * topology.n_levels
+            factors[0] = _WIRE_FACTOR[kind](max(1, c["group"]))
+        for lab, f in zip(labels, factors):
+            by_level[lab] += c["bytes"] * f
+            total += c["bytes"] * f
+    by_level["total"] = total
+    return by_level
+
+
+def level_wire_seconds(level_bytes: dict, topology: Topology) -> dict:
+    """Price per-level wire bytes (a :func:`collective_level_bytes` dict) by
+    each level's ``wire_bw``: {label: seconds, "total": sum}.  The flat
+    hierarchy prices its (all-outermost) bytes at the outermost wire class;
+    for a single-level topology that is the historical
+    ``wire_seconds()`` bit-identically (innermost default bw == ici_bw)."""
+    labels = topology.wire_labels()
+    out = {}
+    for lab in labels:
+        out[lab] = level_bytes.get(lab, 0.0) / topology.wire_bw(lab)
+    out["total"] = sum(out[lab] for lab in labels)
+    return out
+
+
 def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
-                   wire_bytes_per_dev: float) -> dict:
+                   wire_bytes_per_dev: float,
+                   collective_s: float | None = None) -> dict:
+    """Three-term roofline.  ``collective_s`` overrides the flat wire price
+    (the dry-run passes the per-level total from
+    :func:`level_wire_seconds`); default is the historical flat pricing."""
     compute = flops_per_dev / HW["peak_flops"]
     memory = bytes_per_dev / HW["hbm_bw"]
-    coll = wire_seconds(wire_bytes_per_dev)
+    coll = (wire_seconds(wire_bytes_per_dev) if collective_s is None
+            else collective_s)
     terms = {"compute_s": compute, "memory_s": memory, "collective_s": coll}
     terms["bottleneck"] = max(terms, key=lambda k: terms[k]
                               if k.endswith("_s") else -1)
@@ -128,8 +311,27 @@ def extrapolate(f1: float, f2: float, n_periods: int) -> float:
     return f1 + (n_periods - 1) * (f2 - f1)
 
 
+def mesh_factors(n_dev: int, topology: Topology | None = None
+                 ) -> tuple[int, int]:
+    """(dp, msize): data-parallel ways and TP (model) ways of one cell.
+
+    Derived from the topology when given — the innermost level is the TP
+    lane group, everything outer is data-parallel — falling back to the
+    historical ``n_dev // 16`` production heuristic (a 16-wide `model`
+    axis) when the cell's geometry is unknown.
+    """
+    if topology is not None:
+        msize = topology.lanes_per_cluster
+        dp = max(1, n_dev // msize)
+    else:
+        msize = min(16, n_dev)
+        dp = max(1, n_dev // 16)
+    return dp, msize
+
+
 def resident_model_bytes(cfg, shape, n_dev: int, nm: int,
-                         args_bytes: float) -> float:
+                         args_bytes: float,
+                         topology: Topology | None = None) -> float:
     """Analytic per-device HBM *residency* (TPU buffer-reuse semantics).
 
     The CPU backend's temp arena double-buffers where a TPU executable
@@ -145,13 +347,12 @@ def resident_model_bytes(cfg, shape, n_dev: int, nm: int,
     """
     bpe = 2
     P = cfg.n_params()
-    dp = max(1, n_dev // 16)
+    dp, msize = mesh_factors(n_dev, topology)
     grads = P * bpe / n_dev
     acc = grads if (shape.kind == "train" and nm > 1) else 0.0
     if shape.kind != "train":
         return args_bytes + 2**30            # caches are args; +1GiB workspace
     B_mb_loc = max(1, shape.global_batch // nm // dp)
-    msize = min(16, n_dev)
     x_save = cfg.n_layers * B_mb_loc * shape.seq_len * cfg.d_model * bpe \
         / msize                              # act_seq-sharded residual saves
     # largest layer working set (recompute live set), x2 safety
@@ -163,7 +364,8 @@ def resident_model_bytes(cfg, shape, n_dev: int, nm: int,
     return args_bytes + grads + acc + x_save + work + ce
 
 
-def memory_model_bytes(cfg, shape, n_dev: int, nm: int) -> float:
+def memory_model_bytes(cfg, shape, n_dev: int, nm: int,
+                       topology: Topology | None = None) -> float:
     """Analytic per-device HBM traffic (fusion-aware second opinion).
 
     The CPU backend's cost_analysis counts every unfused op's operands, a
@@ -180,28 +382,25 @@ def memory_model_bytes(cfg, shape, n_dev: int, nm: int) -> float:
     bpe = 2
     P_loc = cfg.n_params() * bpe / n_dev
     d = cfg.d_model
+    dp, msize = mesh_factors(n_dev, topology)
     if shape.kind == "train":
-        B_loc_mb = max(1, shape.global_batch // nm
-                       // max(1, n_dev // 16))         # dp shards ~ n_dev/16
-        dp = max(1, n_dev // 16)
         B_loc_mb = max(1, shape.global_batch // nm // dp)
         toks = B_loc_mb * shape.seq_len
         c_act = 12.0
         act = nm * cfg.n_layers * c_act * toks * d * bpe
         n_attn = sum(1 for layer in cfg.layer_period
                      for k in layer if k in ("attn", "xattn")) * cfg.n_periods
-        H_loc = max(1, cfg.n_heads // 16)
+        H_loc = max(1, cfg.n_heads // msize)
         scores = nm * n_attn * 2 * B_loc_mb * H_loc * shape.seq_len \
             * shape.seq_len * 4
         weights = nm * 3 * P_loc
         opt = 16 * cfg.n_params() / n_dev
         return act + scores + weights + opt
     if shape.kind == "prefill":
-        dp = max(1, n_dev // 16)
         B_loc = max(1, shape.global_batch // dp)
         toks = B_loc * shape.seq_len
         act = cfg.n_layers * 6.0 * toks * d * bpe
-        H_loc = max(1, cfg.n_heads // 16)
+        H_loc = max(1, cfg.n_heads // msize)
         n_attn = sum(1 for layer in cfg.layer_period
                      for k in layer if k in ("attn", "xattn")) * cfg.n_periods
         scores = n_attn * B_loc * H_loc * shape.seq_len * shape.seq_len * 4

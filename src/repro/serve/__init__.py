@@ -1,3 +1,5 @@
-from .engine import Request, ServeConfig, ServingEngine
+from .engine import (Request, ServeConfig, ServingEngine,
+                     pod_local_cache_rules, prefix_key)
 
-__all__ = ["Request", "ServeConfig", "ServingEngine"]
+__all__ = ["Request", "ServeConfig", "ServingEngine",
+           "pod_local_cache_rules", "prefix_key"]

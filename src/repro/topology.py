@@ -66,6 +66,21 @@ def default_hop_lat(depth_from_inner: int) -> float:
     return 2.0 * (2 ** depth_from_inner)
 
 
+#: default innermost-level wire bandwidth, bytes/s.  Matches the historical
+#: flat launch-layer link price (``repro.roofline.analysis.HW["ici_bw"]``),
+#: so a single-level topology prices collectives bit-identically to the old
+#: flat ``wire_seconds()``.
+DEFAULT_WIRE_BW = 50e9
+
+
+#: default per-level wire bandwidth counted from the innermost level
+#: outward: 50, 25, 12.5 ... GB/s — each level's longer wires carry half
+#: the bandwidth of the level below (the launch-layer dual of
+#: :func:`default_hop_lat`: latency doubles outward, bandwidth halves).
+def default_wire_bw(depth_from_inner: int) -> float:
+    return DEFAULT_WIRE_BW / (2 ** depth_from_inner)
+
+
 def hier_name(n_levels: int) -> str:
     """The canonical hierarchical-model name for an n-deep topology."""
     return _HIER_WORDS.get(n_levels, f"{n_levels}-level")
@@ -99,11 +114,15 @@ class Level:
     ``axis``     mesh-axis name(s) this level shards over (str, or a tuple
                  of names treated as one flattened ring)
     ``size``     fan-out: how many level-(i+1) groups one group contains
-    ``hop_lat``  cycles for one hop on this level's wires
+    ``hop_lat``  cycles for one hop on this level's wires (the sim price)
+    ``wire_bw``  bytes/s one link of this level's wires sustains (the
+                 launch-layer price; ``None`` defaults by depth — 50 GB/s
+                 innermost, halving outward, see :func:`default_wire_bw`)
     """
     axis: "str | tuple[str, ...]"
     size: int
     hop_lat: float
+    wire_bw: "float | None" = None
 
     def __post_init__(self):
         if self.size < 1:
@@ -112,6 +131,14 @@ class Level:
         if self.hop_lat < 0:
             raise ValueError(f"level {self.axis!r} needs hop_lat >= 0, "
                              f"got {self.hop_lat}")
+        if self.wire_bw is not None and self.wire_bw <= 0:
+            raise ValueError(f"level {self.axis!r} needs wire_bw > 0, "
+                             f"got {self.wire_bw}")
+
+    @property
+    def axes(self) -> tuple:
+        """``axis`` normalised to a tuple of mesh-axis names."""
+        return (self.axis,) if isinstance(self.axis, str) else tuple(self.axis)
 
 
 def _as_level(entry) -> Level:
@@ -316,6 +343,21 @@ class Topology:
             raise ValueError(f"level must be one of {labels}, got {level!r}")
         return self.levels[labels.index(level)].hop_lat
 
+    def wire_bw(self, level: str) -> float:
+        """Wire bandwidth (bytes/s) of one wire class, by label.  Always a
+        float: levels built without an explicit ``wire_bw`` resolve to the
+        depth default (:func:`default_wire_bw` — 50 GB/s innermost, halving
+        outward), so equality-by-value between default-priced topologies is
+        unaffected by the launch-layer prices."""
+        labels = self.wire_labels()
+        if level not in labels:
+            raise ValueError(f"level must be one of {labels}, got {level!r}")
+        i = labels.index(level)
+        l = self.levels[i]
+        if l.wire_bw is not None:
+            return l.wire_bw
+        return default_wire_bw(self.n_levels - 1 - i)
+
     def hop_cost(self, src: int, dst: int) -> float:
         """Cycles for one transfer from ring position ``src`` forward to
         ``dst`` (sum of link prices along the directed ring path).  Under
@@ -432,9 +474,10 @@ class Topology:
         ``n_clusters``)."""
         ring = self.levels[-2] if self.n_levels > 1 else self.levels[0]
         inner = self.levels[-1]
-        lvls = (Level(ring.axis, n_clusters, self.inter_hop_lat),
+        lvls = (Level(ring.axis, n_clusters, self.inter_hop_lat,
+                      ring.wire_bw),
                 Level(inner.axis if self.n_levels > 1 else "lane",
-                      lanes_per_cluster, self.intra_hop_lat))
+                      lanes_per_cluster, self.intra_hop_lat, inner.wire_bw))
         hierarchy = "flat" if self.hierarchy == "flat" else None
         return Topology(levels=lvls, hierarchy=hierarchy)
 
@@ -444,8 +487,9 @@ class Topology:
             "n_levels": self.n_levels,
             "levels": [{"axis": list(l.axis) if isinstance(l.axis, tuple)
                         else l.axis,
-                        "size": l.size, "hop_lat": l.hop_lat}
-                       for l in self.levels],
+                        "size": l.size, "hop_lat": l.hop_lat,
+                        "wire_bw": self.wire_bw(lab)}
+                       for l, lab in zip(self.levels, self.wire_labels())],
             "n_clusters": self.n_clusters,
             "lanes_per_cluster": self.lanes_per_cluster,
             "n_lanes": self.n_lanes,
@@ -466,7 +510,7 @@ def mesh_levels(topology: Topology, mesh_shape) -> list:
     """
     levels = []
     for l in topology.levels:
-        axes = (l.axis,) if isinstance(l.axis, str) else tuple(l.axis)
+        axes = l.axes
         size = 1
         for a in axes:
             if a not in mesh_shape:

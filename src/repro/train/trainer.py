@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.parallel.sharding import ShardingRules
+from repro.parallel.sharding import ShardingRules, param_shardings
 from .optimizer import OptConfig, adamw_init, adamw_update, opt_state_defs
 
 
@@ -24,15 +24,44 @@ def train_state_defs(cfg: ModelConfig, opt_cfg: OptConfig):
     return pdefs, opt_state_defs(pdefs, opt_cfg)
 
 
+def make_grad_sync(cfg: ModelConfig, rules: ShardingRules):
+    """Hierarchical gradient-sync hook for ``make_train_step(grad_sync=)``.
+
+    Pins each accumulated gradient to its parameter's sharding under
+    ``rules`` *before* the optimizer step.  With pod-local FSDP rules
+    (``fsdp`` mapped over the inner topology levels only, params replicated
+    across pods), this materialises the reduce-scatter on the inner rings
+    first; the cross-pod all-reduce XLA then inserts for the replicated
+    params only ever carries the 1/|inner|-sized shard — the launch-layer
+    analogue of ``core.ring.ring_reduce_scatter_local_hier`` (lane ring
+    first, pod ring last), expressed as sharding rules + a hook instead of
+    monkey-patching.
+    """
+    shardings = param_shardings(lm.model_defs(cfg), rules)
+
+    def sync(grads):
+        return jax.tree.map(
+            lambda g, s: g if s is None
+            else jax.lax.with_sharding_constraint(g, s),
+            grads, shardings)
+
+    return sync
+
+
 def make_train_step(cfg: ModelConfig, rules: ShardingRules,
                     opt_cfg: OptConfig, n_microbatches: int = 1,
-                    acc_dtype=jnp.float32):
+                    acc_dtype=jnp.float32, grad_sync=None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     batch: {"tokens": (B, S) int32, optional "ctx": (B, T, d_ctx)}.
     Microbatches split the batch dim and accumulate grads (``acc_dtype``;
     bf16 for the HBM-bound giants) in a sequential lax.scan — the standard
     memory/compute trade at pod scale.
+
+    ``grad_sync`` (grads -> grads), when given, runs on the accumulated
+    gradients before the optimizer update — the hierarchical-sync hook
+    (:func:`make_grad_sync`) stages the gradient reduce-scatter level by
+    level there instead of leaving the whole sync to XLA's default placement.
     """
 
     def loss_fn(params, tokens, ctx):
@@ -68,6 +97,8 @@ def make_train_step(cfg: ModelConfig, rules: ShardingRules,
             grads = jax.tree.map(lambda g: g / n_microbatches, gacc)
             loss = lsum / n_microbatches
 
+        if grad_sync is not None:
+            grads = grad_sync(grads)
         params, opt, metrics = adamw_update(state.params, grads, state.opt,
                                             opt_cfg)
         metrics["loss"] = loss

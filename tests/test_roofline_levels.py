@@ -1,0 +1,236 @@
+"""HLO -> topology-level mapper + per-level collective pricing.
+
+Synthetic-HLO units pin the replica-group parser (iota and explicit forms,
+-start/-done pairs, multi-axis groups, collective-permute pairs) and the
+per-level byte attribution; the fixture tests replay a *recorded* smoke
+dry-run (tests/data/) and assert the flat-vs-hierarchical ``collective_s``
+pricing reproduces bit for bit from the stored wire bytes — the launch
+layer's analogue of the frozen ``red_tree_lat_64`` sim calibration.
+"""
+import json
+import math
+import pathlib
+
+import pytest
+
+from repro.roofline.analysis import (HW, collective_bytes,
+                                     collective_level_bytes,
+                                     group_level_extents, level_wire_seconds,
+                                     parse_collectives, wire_seconds)
+from repro.topology import Level, Topology
+
+DATA = pathlib.Path(__file__).parent / "data"
+
+#: the production three-level machine (2 pods x 16 clusters x 16 lanes)
+TOPO512 = Topology.from_levels([("pod", 2, 8.0), ("data", 16, 4.0),
+                                ("model", 16, 2.0)])
+
+
+def _topo_from_describe(d: dict) -> Topology:
+    return Topology.from_levels(
+        [Level(tuple(l["axis"]) if isinstance(l["axis"], list) else l["axis"],
+               l["size"], l["hop_lat"], l["wire_bw"]) for l in d["levels"]],
+        hierarchy=d["hierarchy"])
+
+
+# ---------------------------------------------------------------------------
+# Parser: replica group forms
+# ---------------------------------------------------------------------------
+
+def test_parse_iota_groups_contiguous():
+    hlo = ("  ag = bf16[512]{0} all-gather(bf16[32]{0} p), "
+           "replica_groups=[32,16]<=[512], dimensions={0}")
+    (c,) = parse_collectives(hlo)
+    assert c["kind"] == "all-gather" and c["group"] == 16
+    assert c["members"] == tuple(range(16))
+    assert c["bytes"] == 512 * 2
+
+
+def test_parse_iota_groups_transposed():
+    hlo = ("  ar = f32[128]{0} all-reduce(f32[128]{0} q), "
+           "replica_groups=[16,32]<=[32,16]T(1,0)")
+    (c,) = parse_collectives(hlo)
+    # transpose: the first group strides by 16 — the (pod, data) ring
+    assert c["group"] == 32
+    assert c["members"] == tuple(range(0, 512, 16))
+
+
+def test_parse_explicit_groups_and_pairs():
+    hlo = """
+  rs = f32[64]{0} reduce-scatter(f32[256]{0} s), replica_groups={{0,1,2,3},{4,5,6,7}}
+  cp = f32[64]{0} collective-permute(f32[64]{0} r), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+"""
+    rs, cp = parse_collectives(hlo)
+    assert rs["members"] == (0, 1, 2, 3) and rs["group"] == 4
+    assert cp["pairs"] == ((0, 1), (1, 2), (2, 3), (3, 0))
+
+
+def test_parse_start_done_counted_once():
+    hlo = """
+  ags = bf16[512]{0} all-gather-start(bf16[32]{0} p), replica_groups=[32,16]<=[512], dimensions={0}
+  agd = bf16[512]{0} all-gather-done(bf16[512]{0} ags)
+"""
+    colls = parse_collectives(hlo)
+    assert len(colls) == 1 and colls[0]["kind"] == "all-gather"
+
+
+# ---------------------------------------------------------------------------
+# Level extents
+# ---------------------------------------------------------------------------
+
+def test_group_extents_single_axis():
+    # model-axis group: 16 contiguous ids inside one cluster
+    assert group_level_extents(tuple(range(16)), TOPO512) == (1, 1, 16)
+    # data-axis group: stride 16 inside one pod
+    assert group_level_extents(tuple(range(0, 256, 16)), TOPO512) \
+        == (1, 16, 1)
+    # pod-axis group: stride 256
+    assert group_level_extents((0, 256), TOPO512) == (2, 1, 1)
+
+
+def test_group_extents_multi_axis():
+    # (pod, data) joint group — the fsdp/batch ring of the 2x16x16 mesh
+    assert group_level_extents(tuple(range(0, 512, 16)), TOPO512) \
+        == (2, 16, 1)
+    # everything
+    assert group_level_extents(tuple(range(512)), TOPO512) == (2, 16, 16)
+
+
+def test_degenerate_inputs_fall_back_conservatively():
+    # duplicate ids (malformed HLO): flat ring at the outermost level,
+    # never a crash
+    assert group_level_extents((0, 0), TOPO512) == (2, 1, 1)
+    # permute pairs outside the topology (mesh mismatch): charged to the
+    # outermost (long) wires, mirroring the grouped-collective fallback
+    hlo = ("  cp = f32[64]{0} collective-permute(f32[64]{0} r), "
+           "source_target_pairs={{600,601},{0,1}}")
+    lv = collective_level_bytes(parse_collectives(hlo), TOPO512)
+    assert lv["pod"] == pytest.approx(256 / 2)
+    assert lv["intra"] == pytest.approx(256 / 2)
+
+
+def test_group_extents_non_aligned_falls_back_outermost():
+    # not an axis-aligned subgrid: 3 ids spanning data; falls back to a
+    # flat ring over the whole group at the outermost spanned level
+    ext = group_level_extents((0, 16, 32), TOPO512)
+    assert ext == (1, 3, 1)            # still a subgrid: 3 data coords
+    ext = group_level_extents((0, 16, 17), TOPO512)   # 2 data x ragged lane
+    assert ext == (1, 3, 1)
+
+
+# ---------------------------------------------------------------------------
+# Per-level byte attribution
+# ---------------------------------------------------------------------------
+
+def test_level_bytes_conserved_and_attributed():
+    hlo = """
+  ag = bf16[512]{0} all-gather(bf16[32]{0} p), replica_groups=[32,16]<=[512], dimensions={0}
+  ar = f32[128]{0} all-reduce(f32[128]{0} q), replica_groups=[16,32]<=[32,16]T(1,0)
+  rs = f32[64]{0} reduce-scatter(f32[256]{0} s), replica_groups={{0,1,2,3}}
+"""
+    colls = parse_collectives(hlo)
+    lv = collective_level_bytes(colls, TOPO512)
+    # ring-schedule attribution conserves total wire bytes vs flat
+    assert lv["total"] == pytest.approx(collective_bytes(colls)["total"])
+    # the model-only all-gather and the 4-wide reduce-scatter stay intra
+    assert lv["intra"] == pytest.approx(15 / 16 * 1024 + 3 / 4 * 256)
+    # the (pod, data) all-reduce: pod superchunks first, then each pod's
+    # data ring on half-sized shards: 2*(1/2)*512 + 2*(15/16)/2*512
+    assert lv["pod"] == pytest.approx(512.0)
+    assert lv["inter"] == pytest.approx(480.0)
+
+
+def test_permute_attribution_by_pair_coords():
+    hlo = ("  cp = f32[64]{0} collective-permute(f32[64]{0} r), "
+           "source_target_pairs={{0,16},{16,32},{256,0},{0,1}}")
+    (c,) = parse_collectives(hlo)
+    lv = collective_level_bytes([c], TOPO512)
+    # 2/4 pairs cross data, 1/4 crosses pod, 1/4 stays in-cluster
+    assert lv["inter"] == pytest.approx(256 * 2 / 4)
+    assert lv["pod"] == pytest.approx(256 / 4)
+    assert lv["intra"] == pytest.approx(256 / 4)
+
+
+def test_flat_hierarchy_prices_outermost():
+    hlo = ("  ag = bf16[512]{0} all-gather(bf16[32]{0} p), "
+           "replica_groups=[32,16]<=[512], dimensions={0}")
+    colls = parse_collectives(hlo)
+    flat = TOPO512.with_hierarchy("flat")
+    lv = collective_level_bytes(colls, flat)
+    assert lv["inter"] == lv["intra"] == 0.0
+    assert lv["pod"] == pytest.approx(collective_bytes(colls)["total"])
+
+
+def test_single_level_topology_bit_identical_to_flat_hw():
+    """The degenerate case: one level prices exactly like wire_seconds()."""
+    one = Topology.from_levels([("model", 512, 2.0)])
+    assert one.wire_bw("intra") == HW["ici_bw"]
+    hlo = ("  ar = f32[4096]{0} all-reduce(f32[4096]{0} q), "
+           "replica_groups=[1,512]<=[512]")
+    colls = parse_collectives(hlo)
+    lv = collective_level_bytes(colls, one)
+    assert lv["total"] == collective_bytes(colls)["total"]
+    assert level_wire_seconds(lv, one)["total"] == \
+        wire_seconds(collective_bytes(colls)["total"])
+
+
+# ---------------------------------------------------------------------------
+# Recorded dry-run regression (flat vs hierarchical pricing, pinned)
+# ---------------------------------------------------------------------------
+
+def test_recorded_collectives_price_bit_identically():
+    fix = json.loads((DATA / "roofline_collectives_2x2x2.json").read_text())
+    topo = _topo_from_describe(fix["topology"])
+    colls = fix["colls"]
+    for c in colls:                     # JSON round-trip: lists -> tuples
+        if "members" in c:
+            c["members"] = tuple(c["members"])
+        if "pairs" in c:
+            c["pairs"] = tuple((s, d) for s, d in c["pairs"])
+    flat = collective_bytes(colls)
+    assert flat["total"] == fix["flat_bytes_total"]
+    assert wire_seconds(flat["total"]) == fix["flat_s"]
+    lv = collective_level_bytes(colls, topo)
+    for k, v in fix["level_bytes"].items():
+        assert lv[k] == v, (k, lv[k], v)
+    secs = level_wire_seconds(lv, topo)
+    for k, v in fix["level_s"].items():
+        assert secs[k] == v, (k, secs[k], v)
+    # hierarchical pricing must genuinely differ from the flat single-class
+    # price on this three-level machine (cheap intra wires dominate)
+    assert secs["total"] != fix["flat_s"]
+
+
+def test_bench_perf_pod_ring_ablation():
+    """The BENCH_sim.json launch-strategy numbers (full llama3-8b train_4k
+    on the 2x16x16 multi-pod cell) must keep the PR's headline property:
+    hierarchical gradient sync prices strictly less pod-ring traffic than
+    joint-axis fsdp_pure."""
+    bench = json.loads(
+        (pathlib.Path(__file__).parents[1] / "BENCH_sim.json").read_text())
+    cell = bench["perf"]["llama3-8b__train_4k__pod2x16x16"]
+    for strat in ("baseline", "fsdp_pure", "fsdp_hier"):
+        assert set(cell[strat]["collective_s_by_level"]) == \
+            {"pod", "inter", "intra"}, strat
+    hier, pure = cell["fsdp_hier"], cell["fsdp_pure"]
+    assert hier["wire_bytes_by_level"]["pod"] < \
+        pure["wire_bytes_by_level"]["pod"]
+    assert hier["collective_s_by_level"]["pod"] < \
+        pure["collective_s_by_level"]["pod"]
+    assert hier["collective_s"] < pure["collective_s"]
+
+
+def test_recorded_dryrun_artifact_breakdown_consistent():
+    rec = json.loads((DATA / "dryrun_smoke_topo2x2x2.json").read_text())
+    topo = _topo_from_describe(rec["topology"])
+    r = rec["roofline"]
+    by = r["collective_s_by_level"]
+    assert set(by) == set(topo.wire_labels())
+    assert r["collective_s"] == pytest.approx(sum(by.values()), rel=1e-12)
+    # flat single-class reference pricing is the historical wire_seconds()
+    assert r["collective_s_flat_hw"] == \
+        wire_seconds(rec["per_device"]["wire_bytes"])
+    # re-pricing the stored per-level bytes reproduces the stored seconds
+    secs = level_wire_seconds(rec["per_device"]["wire_bytes_by_level"], topo)
+    for k in topo.wire_labels():
+        assert secs[k] == by[k], (k, secs[k], by[k])

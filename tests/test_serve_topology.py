@@ -1,0 +1,45 @@
+"""Pod-local KV serving: placement + prefix affinity + bit-identity on a
+2x2x2 mesh of 8 fake devices (subprocess check), plus single-process units
+for the rule derivation."""
+from repro.parallel.sharding import ShardingRules
+from repro.serve import pod_local_cache_rules, prefix_key
+from repro.testing.subproc import run_check
+from repro.topology import Topology
+import numpy as np
+
+
+def test_serve_topology_multidevice():
+    out = run_check("repro.testing.check_serve_topology", devices=8)
+    assert "check_serve_topology OK" in out
+
+
+def test_pod_local_cache_rules_strip_outer_level():
+    topo = Topology.from_levels([("pod", 2, 8.0), ("data", 2, 4.0),
+                                 ("model", 2, 2.0)])
+    rules = ShardingRules(None, None)
+    # mesh-less rules pass through untouched
+    assert pod_local_cache_rules(rules, topo) is rules
+
+    class FakeMesh:                      # only identity is inspected here
+        pass
+
+    mesh = FakeMesh()
+    src = ShardingRules(mesh, {
+        "batch": ("pod", "data"),
+        "kv": "model",
+        "cache_seq": "pod",
+        "act_seq": None,
+    })
+    got = pod_local_cache_rules(src, topo)
+    assert got.rules["batch"] == "data"       # pod stripped, singleton kept
+    assert got.rules["kv"] == "model"         # inner mapping untouched
+    assert got.rules["cache_seq"] is None     # pod-only mapping removed
+    assert got.rules["act_seq"] is None
+
+
+def test_prefix_key_buckets_prompt_head():
+    a = np.arange(32, dtype=np.int32)
+    b = np.concatenate([np.arange(16, dtype=np.int32),
+                        np.full(8, 7, np.int32)])
+    assert prefix_key(a) == prefix_key(b)       # same 16-token head
+    assert prefix_key(a) != prefix_key(a + 1)
