@@ -17,6 +17,8 @@ Sections:
   fig6   performance scalability (weak scaling, normalized to 8-lane Ara2)
          + flat-vs-two-level ablation + 64-lane C x L factorisation sweep
          + 64-lane three-level pod x cluster x lane sweep (2x8x4, 4x4x4, ...)
+         + 64-lane sequential-vs-overlap (double-buffered machine) ablation
+           with the exposed-vs-hidden wire-cycle split
   fig7   interface latency tolerance (utilization drop per register cut)
   tab1   kernel peak-rate check (Table I max-perf model vs simulated)
   tab2   area model vs published kGE breakdown
@@ -24,12 +26,18 @@ Sections:
   kern   Pallas kernels (interpret) vs jnp oracle wall time
   ring   AraXL core collectives correctness+wall time (8 fake devices)
   coll   flat vs two-level vs XLA-native collectives head-to-head
-         (reduce / allgather / reduce-scatter / staged GLSU, 8 fake devices,
-         both C·L factorizations — the §III-B.4 hierarchy ablation)
+         (reduce / allgather / reduce-scatter / staged GLSU + the db
+         double-buffered rings, 8 fake devices, both C·L factorizations —
+         the §III-B.4 hierarchy ablation; median-of-k wall-clock recorded
+         into BENCH_sim.json `coll`)
+  ring_attn  measured sequential vs double-buffered ring attention
+         (8 fake devices, flat + 2x2x2 odometer; BENCH_sim.json
+         `ring_attention_8dev`)
   roof   roofline summary per dry-run cell (requires results/dryrun/*.json)
-  perf   launch-strategy comparison (baseline / fsdp_pure / fsdp_hier):
-         merges the per-level collective pricing of results/perf/*.json
-         into BENCH_sim.json — the pod-ring gradient-sync ablation
+  perf   launch-strategy comparison (baseline / fsdp_pure / fsdp_hier /
+         fsdp_hier_ov): merges the per-level collective pricing and the
+         overlap-aware exposed seconds of results/perf/*.json into
+         BENCH_sim.json — the pod-ring gradient-sync ablation
 
 Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
            [--hierarchy flat|two-level|both] [--json PATH | --no-json]
@@ -140,6 +148,27 @@ def bench_fig6(hierarchies=("flat", "two-level")):
             print(f"fig6/pod/{k}/{tag},0,scale={s:.2f}x "
                   f"tree={p.red_tree_lat():.0f}cyc")
 
+    # Overlap ablation at the flagship 64 lanes: the double-buffered
+    # machine (simulate(overlap=True) — wire-wait bubbles backfilled by
+    # independent instructions) against the paper-calibrated sequential
+    # engine, with the exposed-vs-hidden wire-cycle split of both.  The
+    # reduction-bound kernels are the ones the overlap should move toward
+    # the near-linear band; compute-bound kernels must not regress.
+    p64 = araxl_params(64)
+    ov = BENCH.setdefault("fig6_overlap_64", {})
+    for k in KERNELS:
+        r0 = simulate(build_trace(k, p64, 512), p64)
+        r1 = simulate(build_trace(k, p64, 512), p64, overlap=True)
+        s0 = r0.flop_per_cycle / base[k]
+        s1 = r1.flop_per_cycle / base[k]
+        ov[k] = {"baseline": round(s0, 3), "overlap": round(s1, 3),
+                 "exposed_cycles": round(r0.wire_exposed_total, 1),
+                 "exposed_cycles_overlap": round(r1.wire_exposed_total, 1),
+                 "hidden_cycles_overlap": round(r1.wire_hidden_total, 1)}
+        print(f"fig6/overlap/{k},0,base={s0:.2f}x overlap={s1:.2f}x "
+              f"exposed={r0.wire_exposed_total:.0f}->"
+              f"{r1.wire_exposed_total:.0f}cyc")
+
 
 def bench_fig7():
     from repro.sim import araxl_params, build_trace, simulate
@@ -242,13 +271,41 @@ def bench_ring():
 
 
 def bench_collectives():
+    """XLA-native vs shard_map-ring head-to-head, both factorizations,
+    recorded into BENCH_sim.json under ``coll`` (median-of-k timing from
+    ``check_collectives``): coll[CxL][collective][variant] = median us.
+    Variants cover flat / two-level / xla plus the ``*-db`` double-buffered
+    ring schedules."""
     from repro.testing.subproc import run_check
+    coll = BENCH.setdefault("coll", {})
     for C, L in ((4, 2), (2, 4)):
         out = run_check("repro.testing.check_collectives", str(C), str(L),
                         devices=8)
         for line in out.splitlines():
-            if line.startswith("coll/"):
-                print(line)
+            if not line.startswith("coll/"):
+                continue
+            print(line)
+            name, us, _ = line.split(",")
+            _, op, tag, variant = name.split("/")
+            coll.setdefault(tag, {}).setdefault(op, {})[variant] = float(us)
+
+
+def bench_ring_attn():
+    """Measured sequential-vs-double-buffered ring attention on 8 fake
+    devices (flat ring + hierarchical 2x2x2 odometer), median wall-clock
+    per schedule from ``check_overlap`` — recorded into BENCH_sim.json as
+    ``ring_attention_8dev[case][schedule] = us`` (the db schedule also
+    re-proves bit-identity in the same run)."""
+    from repro.testing.subproc import run_check
+    out = run_check("repro.testing.check_overlap", "attn", devices=8)
+    ra = BENCH.setdefault("ring_attention_8dev", {})
+    for line in out.splitlines():
+        if not line.startswith("ringattn/"):
+            continue
+        print(line)
+        name, us, _ = line.split(",")
+        _, case, sched = name.split("/")
+        ra.setdefault(case, {})[sched] = float(us)
 
 
 def bench_roofline():
@@ -303,6 +360,22 @@ def bench_perf():
             entry["collective_s_flat_hw"] = r["collective_s_flat_hw"]
             entry["wire_bytes_by_level"] = \
                 rec["per_device"]["wire_bytes_by_level"]
+            # overlap-aware exposure (exposed_i <= collective_i per level);
+            # artifacts recorded before the field existed are re-priced
+            # from their stored topology + per-level seconds
+            exp = r.get("exposed_collective_s_by_level")
+            exp_total = r.get("exposed_collective_s")
+            if exp is None and "topology" in rec:
+                from repro.roofline.analysis import exposed_level_seconds
+                from repro.topology import Topology
+                derived = exposed_level_seconds(
+                    r["collective_s_by_level"], r["compute_s"],
+                    Topology.from_describe(rec["topology"]))
+                exp_total = derived.pop("total")
+                exp = derived
+            if exp is not None:
+                entry["exposed_collective_s_by_level"] = exp
+                entry["exposed_collective_s"] = exp_total
         key = f"{rec['arch']}__{rec['shape']}__{mesh}"
         perf.setdefault(key, {})[strat] = entry
         lv = r.get("collective_s_by_level", {})
@@ -314,12 +387,14 @@ def bench_perf():
 SECTIONS = {
     "fig6": bench_fig6, "fig7": bench_fig7, "tab1": bench_tab1,
     "tab2": bench_tab2, "tab3": bench_tab3, "kern": bench_kernels,
-    "ring": bench_ring, "coll": bench_collectives, "roof": bench_roofline,
+    "ring": bench_ring, "coll": bench_collectives,
+    "ring_attn": bench_ring_attn, "roof": bench_roofline,
     "perf": bench_perf,
 }
 
 #: sections whose derived numbers land in BENCH_sim.json
-SIM_SECTIONS = ("fig6", "fig7", "tab1", "tab2", "tab3", "perf")
+SIM_SECTIONS = ("fig6", "fig7", "tab1", "tab2", "tab3", "coll",
+                "ring_attn", "perf")
 
 
 def _deep_merge(base: dict, new: dict) -> dict:

@@ -21,13 +21,21 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run fig7 tab2 --no-json > /dev/null
 echo "sim benchmark smoke OK (fig7 tab2)"
 
-# Launch-strategy smoke: the hierarchical gradient-sync path (sharding
-# rules + grad-sync hook) must lower and compile, with per-level collective
-# pricing in the record — 8 fake devices, smallest (smoke) arch, 2x2x2
-# three-level topology.  Exits non-zero on any strategy failure.
+# Launch-strategy smoke: the hierarchical gradient-sync paths (sharding
+# rules + grad-sync hook, plain and bucketed/backward-overlapped) must
+# lower and compile, with per-level collective pricing — and the
+# overlap-aware exposed seconds — in the record: 8 fake devices, smallest
+# (smoke) arch, 2x2x2 three-level topology.  Exits non-zero on any
+# strategy failure.
 PERF_OUT="$(mktemp -d)"
 trap 'rm -rf "$PERF_OUT"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.perf \
     --smoke --arch llama3-8b --shape train_4k --topology 2x2x2 \
-    --strategy baseline --strategy fsdp_hier --out "$PERF_OUT" > /dev/null
-echo "launch perf smoke OK (baseline fsdp_hier @ 2x2x2)"
+    --strategy baseline --strategy fsdp_hier_ov --out "$PERF_OUT" > /dev/null
+echo "launch perf smoke OK (baseline fsdp_hier_ov @ 2x2x2)"
+
+# Overlap smoke: one double-buffered ring-attention step (flat + the
+# 2x2x2 odometer) must run and match the sequential schedule bit for bit.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.testing.check_overlap attn > /dev/null
+echo "overlap smoke OK (double-buffered ring attention @ 2x2x2)"

@@ -53,6 +53,13 @@ from repro.topology import HIERARCHIES, check_hierarchy as _check_hierarchy
 from .layout import VectorLayout, VectorMachineSpec
 
 MODES = ("ring", "xla")
+SCHEDULES = ("seq", "db")
+
+
+def _check_schedule(schedule: str) -> None:
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}, "
+                         f"got {schedule!r}")
 
 
 def _resolve_hierarchy(spec: VectorMachineSpec, hierarchy: str | None) -> str:
@@ -230,6 +237,18 @@ def reduce_to_scalar_local_two_level(col: jax.Array,
 
 # -- ring all-gather / reduce-scatter (GLSU staging + FSDP overlap) -----------
 
+def _ring_order(chunks: list, axis_names: Sequence[str], n: int,
+                blk0: int) -> jax.Array:
+    """Rotate per-step arrival chunks into global ring order and flatten:
+    arrival slot j holds the block of ring position (p + j) mod n, so global
+    slot g <- arrival slot (g - p) mod n."""
+    p = ring_pos(axis_names)
+    stacked = jnp.stack(chunks, axis=0)               # [n, ...] arrival order
+    idx = (jnp.arange(n) - p) % n
+    stacked = jnp.take(stacked, idx, axis=0)
+    return stacked.reshape((n * blk0,) + stacked.shape[2:])
+
+
 def ring_allgather_local(x: jax.Array, axis_names: Sequence[str], n: int) -> jax.Array:
     """Classic (n-1)-step ring all-gather along axis 0: per step every device
     forwards the block it received last step to its ring neighbour.
@@ -241,24 +260,45 @@ def ring_allgather_local(x: jax.Array, axis_names: Sequence[str], n: int) -> jax
     for _ in range(n - 1):
         cur = ppermute_shift(cur, axis_names, 1, n)   # receive from p+1
         chunks.append(cur)
-    # arrival slot j holds the block of ring position (p + j) mod n;
-    # rotate into global order: global slot g <- arrival slot (g - p) mod n.
-    p = ring_pos(axis_names)
-    stacked = jnp.stack(chunks, axis=0)               # [n, ...] arrival order
-    idx = (jnp.arange(n) - p) % n
-    stacked = jnp.take(stacked, idx, axis=0)
-    return stacked.reshape((n * x.shape[0],) + x.shape[1:])
+    return _ring_order(chunks, axis_names, n, x.shape[0])
 
 
-def ring_allgather_local_hier(x: jax.Array, levels: Sequence) -> jax.Array:
+def ring_allgather_local_db(x: jax.Array, axis_names: Sequence[str], n: int,
+                            consume: Callable | None = None) -> jax.Array:
+    """Double-buffered ring all-gather: the hop that fetches block ``j+1``
+    is issued *before* block ``j`` is consumed, so the shift rides the wires
+    while the consumer computes — AraXL's slide-behind-compute discipline
+    applied to the whole gather.
+
+    ``consume(block, j)`` (``j`` the arrival step; the block belongs to ring
+    position ``(p + j) mod n``) is applied to every block as it lands; its
+    outputs are returned stacked in global ring order.  Without a consumer
+    the result is **bit-identical** to :func:`ring_allgather_local` — the
+    same blocks arrive in the same order, only the issue order interleaves.
+    """
+    chunks = []
+    cur = x
+    for j in range(n):
+        nxt = ppermute_shift(cur, axis_names, 1, n) if j < n - 1 else None
+        chunks.append(consume(cur, j) if consume is not None else cur)
+        cur = nxt
+    return _ring_order(chunks, axis_names, n, chunks[0].shape[0])
+
+
+def ring_allgather_local_hier(x: jax.Array, levels: Sequence,
+                              schedule: str = "seq") -> jax.Array:
     """Hierarchical all-gather walking ``levels`` (innermost-first (axes,
     size) pairs): L-1 intra-cluster hops assemble each cluster's lane blocks
     (lane-minor order), then C-1 ring hops exchange whole cluster blocks,
     then P-1 pod hops exchange whole pod blocks, ... — together exactly the
     flattened outer-major ring order, with only aggregated payloads on each
-    level's longer wires."""
+    level's longer wires.  ``schedule="db"`` double-buffers every level's
+    ring (bit-identical blocks, next hop issued before the current block is
+    consumed)."""
+    local = (ring_allgather_local_db if schedule == "db"
+             else ring_allgather_local)
     for axes, size in levels:
-        x = ring_allgather_local(x, axes, size)
+        x = local(x, axes, size)
     return x
 
 
@@ -287,15 +327,49 @@ def ring_reduce_scatter_local(x: jax.Array, axis_names: Sequence[str], n: int) -
     return acc                                        # fully-summed chunk p
 
 
-def ring_reduce_scatter_local_hier(x: jax.Array, levels: Sequence) -> jax.Array:
+def ring_reduce_scatter_local_db(x: jax.Array, axis_names: Sequence[str],
+                                 n: int, n_chunks: int = 2) -> jax.Array:
+    """Chunked double-buffered ring reduce-scatter: the payload is split
+    into ``n_chunks`` interleaved pipelines so that while one sub-chunk's
+    partial sum is on the wires, another's local add is streaming — per
+    ring step every shift is issued before any add consumes its arrival.
+    Falls back to a single pipeline when the payload doesn't split.
+
+    Each element sees exactly the same additions in the same order as
+    :func:`ring_reduce_scatter_local`, so the result is **bit-identical**
+    to the sequential schedule."""
+    assert x.shape[0] % n == 0
+    p = ring_pos(axis_names)
+    stacked = jnp.stack(jnp.split(x, n, axis=0), axis=0)  # [n, B/n, ...]
+    if stacked.shape[-1] % n_chunks:
+        n_chunks = 1
+    parts = jnp.split(stacked, n_chunks, axis=-1)
+
+    def pick(part, i):
+        return jnp.take(part, (p + i) % n, axis=0)
+
+    accs = [pick(part, 1) for part in parts]          # partials for chunk p+1
+    for s in range(2, n + 1):
+        # issue every sub-chunk's hop first, then run the adds behind them
+        shifted = [ppermute_shift(a, axis_names, 1, n) for a in accs]
+        accs = [sh + pick(part, s) for sh, part in zip(shifted, parts)]
+    return jnp.concatenate(accs, axis=-1) if n_chunks > 1 else accs[0]
+
+
+def ring_reduce_scatter_local_hier(x: jax.Array, levels: Sequence,
+                                   schedule: str = "seq") -> jax.Array:
     """Hierarchical reduce-scatter walking ``levels`` (innermost-first
     (axes, size) pairs) from the *outside in*: first the outermost ring
     reduce-scatters its superchunks (each device keeps its outer-coordinate
     superchunk, partially summed at fixed inner coordinates), then each
     inner level splits its level's chunk further.  Device p ends with chunk
-    p of the total — identical placement to the flat schedule."""
+    p of the total — identical placement to the flat schedule.
+    ``schedule="db"`` runs each level's ring chunk-pipelined
+    (:func:`ring_reduce_scatter_local_db`, bit-identical sums)."""
+    local = (ring_reduce_scatter_local_db if schedule == "db"
+             else ring_reduce_scatter_local)
     for axes, size in reversed(list(levels)):
-        x = ring_reduce_scatter_local(x, axes, size)
+        x = local(x, axes, size)
     return x
 
 
@@ -380,14 +454,18 @@ def reduce_scalar(spec: VectorMachineSpec, data: jax.Array, op: str = "sum",
 
 
 def ring_allgather(spec: VectorMachineSpec, data: jax.Array,
-                   mode: str = "ring", hierarchy: str | None = None) -> jax.Array:
+                   mode: str = "ring", hierarchy: str | None = None,
+                   schedule: str = "seq") -> jax.Array:
     """All-gather over the lane ring.
 
     ``data`` is (n_total, B): row p is ring position p's shard (sharded
     ``P(ring_axes, None)``).  Returns (n_total, n_total*B): every row the
     full ring-order concatenation (replicated along the ring).  mode='xla'
-    is the XLA-native all-gather baseline."""
+    is the XLA-native all-gather baseline.  schedule='db' double-buffers
+    the ring (hop k+1 issued before block k is consumed; bit-identical
+    result)."""
     _check_mode(mode)
+    _check_schedule(schedule)
     hierarchy = _resolve_hierarchy(spec, hierarchy)
     axes, n = spec.ring_axes, spec.n_total_lanes
     assert data.ndim == 2 and data.shape[0] == n, data.shape
@@ -398,9 +476,11 @@ def ring_allgather(spec: VectorMachineSpec, data: jax.Array,
         if mode == "xla":
             full = substrate.all_gather(col, axes, axis=0, tiled=True)
         elif hierarchy == "flat":
-            full = ring_allgather_local(col, axes, n)
+            full = (ring_allgather_local_db if schedule == "db"
+                    else ring_allgather_local)(col, axes, n)
         else:
-            full = ring_allgather_local_hier(col, _levels_inner_first(spec))
+            full = ring_allgather_local_hier(col, _levels_inner_first(spec),
+                                             schedule)
         return full[None]
 
     return substrate.shard_map(fn, mesh=spec.mesh, in_specs=(in_spec,),
@@ -408,15 +488,17 @@ def ring_allgather(spec: VectorMachineSpec, data: jax.Array,
 
 
 def ring_reduce_scatter(spec: VectorMachineSpec, data: jax.Array,
-                        mode: str = "ring", hierarchy: str | None = None
-                        ) -> jax.Array:
+                        mode: str = "ring", hierarchy: str | None = None,
+                        schedule: str = "seq") -> jax.Array:
     """Reduce-scatter over the lane ring.
 
     ``data`` is (n_total, M) with M % n_total == 0: row p is ring position
     p's full-length contribution.  Returns (n_total, M // n_total): row p =
     chunk p of the elementwise sum of all rows.  mode='xla' is the XLA-native
-    reduce-scatter baseline."""
+    reduce-scatter baseline.  schedule='db' chunk-pipelines each ring so a
+    shift is always in flight behind the adds (bit-identical sums)."""
     _check_mode(mode)
+    _check_schedule(schedule)
     hierarchy = _resolve_hierarchy(spec, hierarchy)
     axes, n = spec.ring_axes, spec.n_total_lanes
     assert data.ndim == 2 and data.shape[0] == n, data.shape
@@ -429,10 +511,12 @@ def ring_reduce_scatter(spec: VectorMachineSpec, data: jax.Array,
             out = substrate.psum_scatter(col, axes, scatter_dimension=0,
                                          tiled=True)
         elif hierarchy == "flat":
-            out = ring_reduce_scatter_local(col, axes, n)
+            out = (ring_reduce_scatter_local_db if schedule == "db"
+                   else ring_reduce_scatter_local)(col, axes, n)
         else:
             out = ring_reduce_scatter_local_hier(col,
-                                                 _levels_inner_first(spec))
+                                                 _levels_inner_first(spec),
+                                                 schedule)
         return out[None]
 
     return substrate.shard_map(fn, mesh=spec.mesh, in_specs=(in_spec,),

@@ -50,7 +50,8 @@ from repro.models import lm
 from repro.parallel.sharding import (abstract_params, default_rules,
                                      param_shardings)
 from repro.roofline.analysis import (HW, collective_bytes,
-                                     collective_level_bytes, extrapolate,
+                                     collective_level_bytes,
+                                     exposed_level_seconds, extrapolate,
                                      level_wire_seconds, memory_model_bytes,
                                      parse_collectives, resident_model_bytes,
                                      roofline_terms, wire_seconds)
@@ -287,6 +288,17 @@ def analyse_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
              for k in ("compute_s", "memory_s", "collective_s")}
     rec["roofline"]["bottleneck"] = max(terms, key=terms.get)
     rec["roofline"]["step_s_lower_bound"] = max(terms.values())
+    if topology is not None:
+        # overlap-aware exposure: the additive per-level seconds stay as
+        # recorded above; these fields say how much of them an ideally
+        # double-buffered schedule could NOT hide behind the compute
+        exp = exposed_level_seconds(rec["roofline"]["collective_s_by_level"],
+                                    terms["compute_s"], topology)
+        rec["roofline"]["exposed_collective_s"] = exp.pop("total")
+        rec["roofline"]["exposed_collective_s_by_level"] = exp
+        rec["roofline"]["step_s_overlap_aware"] = max(
+            terms["memory_s"],
+            terms["compute_s"] + rec["roofline"]["exposed_collective_s"])
     mf = model_flops(cfg, shape)
     rec["model_flops_global"] = mf
     hlo_global = flops * n_dev

@@ -15,6 +15,13 @@ are plain arguments on ``dryrun.analyse_cell`` (``rules=`` / ``n_micro=`` /
               first, pod ring last, like core.ring's hierarchical
               reduce-scatter — via the make_grad_sync hook, so the pod
               wires only ever carry the 1/|inner|-sized gradient shard
+  fsdp_hier_ov fsdp_hier with the *bucketed, backward-overlapped* gradient
+              sync (make_grad_sync(bucket_mb=...)): reverse-order gradient
+              buckets fenced by optimization_barrier, so each bucket's
+              inner-ring reduce-scatter launches as its grads become ready
+              and overlaps the remaining backward compute (pod ring still
+              last); grad-equivalent to fsdp_hier, the roofline record adds
+              the exposed (non-overlappable) collective seconds per level
   moe_a2a     token all-to-all expert parallelism (GLSU shuffle) instead of
               replicated-token psum-combine
   nm_half/nm1 fewer, larger microbatches (fewer FSDP gathers, more act mem)
@@ -44,6 +51,13 @@ from repro.launch.mesh import (make_production_mesh, parse_launch_topology,
 from repro.parallel.sharding import ShardingRules
 from repro.topology import Topology
 from repro.train import make_grad_sync
+
+
+#: bucket size for the backward-overlapped gradient sync (fsdp_hier_ov):
+#: ~25 MiB per bucket keeps each inner-ring reduce-scatter long enough to
+#: amortise launch overhead yet small enough that the first bucket is on
+#: the wires while most of the backward pass is still streaming
+GRAD_BUCKET_MB = 25.0
 
 
 def _all_axes(mesh) -> tuple:
@@ -97,6 +111,10 @@ def apply_strategy(strategy: str, cfg, shape, mesh, topology: Topology):
     if strategy == "fsdp_hier":
         rules = _fsdp_hier_rules(mesh, cfg, shape, topology)
         return cfg, rules, 1, make_grad_sync(cfg, rules)
+    if strategy == "fsdp_hier_ov":
+        rules = _fsdp_hier_rules(mesh, cfg, shape, topology)
+        return cfg, rules, 1, make_grad_sync(cfg, rules,
+                                             bucket_mb=GRAD_BUCKET_MB)
     if strategy == "moe_a2a":
         return dataclasses.replace(cfg, moe_impl="a2a"), None, None, None
     if strategy == "nm_half":

@@ -27,6 +27,20 @@ Two schedules, selected by ``topology=``:
   (exact for the max statistics, last-ulp for the sums); both are exact
   attention.
 
+Both variants take ``schedule=``:
+
+* ``"seq"`` (historical): compute on block *k*, then rotate to fetch block
+  *k+1* — the ppermute sits on the critical path between blocks.
+
+* ``"db"`` (double-buffered): the ppermute fetching block *k+1* is issued
+  *before* the attention compute on block *k* (the per-level odometer is
+  preserved — the same rings turn on the same steps).  The collective has
+  no data dependency on the in-flight block's compute, so a backend with
+  async collectives overlaps the KV transfer with the attention math —
+  AraXL's slides-ride-the-wires-while-FPUs-stream claim at the sequence
+  level.  Blocks are visited in the same order with the same arithmetic,
+  so the result is bit-identical to ``"seq"``.
+
 Exact (online softmax), causal + sliding-window aware, GQA via kv repeat.
 """
 from __future__ import annotations
@@ -73,14 +87,20 @@ def _ring_levels(mesh: Mesh, axis: str, topology: Topology | None):
 
 def ring_attention(q, k, v, mesh: Mesh, *, axis: str = "data",
                    topology: Topology | None = None,
-                   causal: bool = True, window: int | None = None):
+                   causal: bool = True, window: int | None = None,
+                   schedule: str = "seq"):
     """q (B,S,H,D), k/v (B,S,Hkv,D) globally; S sharded over the ring.
 
     Communicates across: the single ``axis`` ring (flat), or every level of
     ``topology`` — the innermost (lane) ring on almost every step, each
     outer (cluster / pod) ring once per inner cycle.  Returns (B,S,H,D)
     with the same sharding.  One ppermute per step — the KV blocks ride the
-    ring while online-softmax state stays local."""
+    ring while online-softmax state stays local.  ``schedule="db"`` issues
+    each step's ppermute before the previous block's attention compute
+    (bit-identical result; the transfer overlaps the math on backends with
+    async collectives)."""
+    if schedule not in ("seq", "db"):
+        raise ValueError(f"schedule must be 'seq' or 'db', got {schedule!r}")
     B, S, H, D = q.shape
     Hkv = k.shape[2]
     if Hkv != H:
@@ -115,10 +135,25 @@ def ring_attention(q, k, v, mesh: Mesh, *, axis: str = "data",
             return (ppermute_shift(kc, axes, 1, size),
                     ppermute_shift(vc, axes, 1, size))
 
+        def advance(kc, vc):                          # one odometer tick
+            i = len(levels) - 1
+            while offsets[i] == sizes[i] - 1:         # complete inner cycle
+                kc, vc = rotate(kc, vc, i)
+                offsets[i] = 0
+                i -= 1
+            kc, vc = rotate(kc, vc, i)                # one hop on ring i
+            offsets[i] += 1
+            return kc, vc
+
         for step in range(n):
             src = sum(((c + off) % s) * st for c, off, s, st in
                       zip(coords, offsets, sizes, strides))
             k_pos = src * S_loc + jnp.arange(S_loc)
+            if schedule == "db" and step < n - 1:
+                # double-buffer: issue the hop(s) fetching block step+1 now;
+                # they depend only on kc/vc, not on this block's compute, so
+                # the transfer can ride the wires under the attention math
+                kn, vn = advance(kc, vc)
             mb, lb, ob = _block_attn(qf, kc, vc, q_pos, k_pos, scale,
                                      causal, window)
             m_new = jnp.maximum(m, mb)
@@ -127,14 +162,8 @@ def ring_attention(q, k, v, mesh: Mesh, *, axis: str = "data",
             l = l * alpha + lb * beta
             o = o * alpha + ob * beta
             m = m_new
-            if step < n - 1:                          # advance the odometer
-                i = len(levels) - 1
-                while offsets[i] == sizes[i] - 1:     # complete inner cycle
-                    kc, vc = rotate(kc, vc, i)
-                    offsets[i] = 0
-                    i -= 1
-                kc, vc = rotate(kc, vc, i)            # one hop on ring i
-                offsets[i] += 1
+            if step < n - 1:
+                kc, vc = (kn, vn) if schedule == "db" else advance(kc, vc)
         safe = jnp.where(l == 0.0, 1.0, l)
         out = (o / safe).transpose(0, 2, 1, 3)        # (B,S_loc,H,D)
         return out.astype(q_loc.dtype)

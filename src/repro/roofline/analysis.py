@@ -289,6 +289,38 @@ def level_wire_seconds(level_bytes: dict, topology: Topology) -> dict:
     return out
 
 
+def exposed_level_seconds(level_secs: dict, compute_s: float,
+                          topology: Topology) -> dict:
+    """Overlap-aware exposure: how much of each level's collective seconds
+    cannot hide behind the step's compute.
+
+    The additive roofline assumes communicate-then-compute; the double-
+    buffered schedules (ring attention ``schedule="db"``, the bucketed
+    gradient sync) let a collective ride the wires while the FPUs stream.
+    An ideally-overlapped schedule therefore only *exposes*
+
+        exposed_i = max(0, collective_s_i - overlappable compute)
+
+    where the compute budget is claimed innermost level first — the short
+    intra-ring hops interleave tightest with the consuming compute (one
+    hop per microbatch / block), while the outermost (pod) ring only has
+    whatever compute the inner levels left unclaimed to hide behind.
+    Always ``exposed_i <= collective_s_i`` per level; with zero compute it
+    degenerates to the additive pricing.  Returns {label: seconds,
+    "total": sum}.
+    """
+    labels = topology.wire_labels()
+    budget = max(0.0, compute_s)
+    out = {}
+    for lab in reversed(labels):                      # innermost first
+        c = level_secs.get(lab, 0.0)
+        out[lab] = max(0.0, c - budget)
+        budget = max(0.0, budget - c)
+    out = {lab: out[lab] for lab in labels}           # outermost-first order
+    out["total"] = sum(out[lab] for lab in labels)
+    return out
+
+
 def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
                    wire_bytes_per_dev: float,
                    collective_s: float | None = None) -> dict:

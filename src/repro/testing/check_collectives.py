@@ -14,27 +14,23 @@ Usage: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 from __future__ import annotations
 
 import sys
-import time
 
 import jax
-
-jax.config.update("jax_enable_x64", True)
-
 import jax.numpy as jnp
 import numpy as np
 
-
-def _time_us(fn, *args, reps: int = 10) -> float:
-    """Compiled-execution microseconds (jit once, then time steady-state)."""
-    jfn = jax.jit(fn)
-    jax.block_until_ready(jfn(*args))          # compile / warm
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(jfn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+from repro.testing.timing import median_time_us as _time_us
+from repro.testing.x64 import x64_mode
 
 
 def main(C: int = 4, L: int = 2) -> None:
+    # float64 payloads scoped to the check: x64_mode restores the flag on
+    # exit and asserts nothing inside re-toggled it (import-clean)
+    with x64_mode(True):
+        _main(C, L)
+
+
+def _main(C: int = 4, L: int = 2) -> None:
     from repro.core import glsu, ring
     from repro.core.glsu import mem_to_reg_host, n_staged_rounds
     from repro.core.layout import VectorMachineSpec
@@ -75,15 +71,39 @@ def main(C: int = 4, L: int = 2) -> None:
     assert int_results["flat"] == int(xi.sum())
 
     # --- ring_allgather ---------------------------------------------------
+    # ``*-db`` rows are the double-buffered schedules (next hop issued
+    # before the current block is consumed) — must stay bit-identical
+    db_variants = [("flat-db", dict(mode="ring", hierarchy="flat",
+                                    schedule="db")),
+                   ("two-level-db", dict(mode="ring", hierarchy="two-level",
+                                         schedule="db"))]
     shard = rng.normal(size=(n, 6))
     js = jnp.asarray(shard)
     want_ag = np.tile(shard.reshape(-1), (n, 1))
-    for name, kw in variants:
+    for name, kw in variants + db_variants:
         got = np.asarray(ring.ring_allgather(spec, js, **kw))
         np.testing.assert_array_equal(got, want_ag,
                                       err_msg=f"ring_allgather/{name}")
         us = _time_us(lambda d, kw=kw: ring.ring_allgather(spec, d, **kw), js)
         print(f"coll/allgather/{tag}/{name},{us:.0f},ok")
+
+    # consumer-interleaved db gather: consume(block, j) runs as each block
+    # lands (the shift fetching block j+1 already in flight) — must equal
+    # transforming after the gather
+    from jax.sharding import PartitionSpec as P
+
+    from repro import substrate
+
+    def _ag_consumed(x):
+        out = ring.ring_allgather_local_db(x[0], spec.ring_axes, n,
+                                           consume=lambda b, j: 2.0 * b + 1.0)
+        return out[None]
+
+    got = substrate.shard_map(_ag_consumed, mesh=spec.mesh,
+                              in_specs=(P(spec.ring_axes, None),),
+                              out_specs=P(spec.ring_axes, None))(js)
+    np.testing.assert_array_equal(np.asarray(got), 2.0 * want_ag + 1.0,
+                                  err_msg="ring_allgather_db/consume")
 
     # --- ring_reduce_scatter ---------------------------------------------
     m = 3
@@ -93,7 +113,7 @@ def main(C: int = 4, L: int = 2) -> None:
     want_rs_i = contrib_i.sum(axis=0).reshape(n, m)
     jcf = jnp.asarray(contrib_f)
     jci = jnp.asarray(contrib_i, jnp.int64)
-    for name, kw in variants:
+    for name, kw in variants + db_variants:
         got = np.asarray(ring.ring_reduce_scatter(spec, jcf, **kw))
         np.testing.assert_allclose(got, want_rs_f, rtol=1e-12,
                                    err_msg=f"ring_reduce_scatter/{name}")

@@ -8,14 +8,20 @@ from __future__ import annotations
 import sys
 
 import jax
-
-jax.config.update("jax_enable_x64", True)
-
 import jax.numpy as jnp
 import numpy as np
 
+from repro.testing.x64 import x64_mode
+
 
 def main(C: int = 4, L: int = 2) -> None:
+    # float64 scoped to this check: x64_mode restores the flag on exit and
+    # asserts nothing inside re-toggled it (import stays clean)
+    with x64_mode(True):
+        _main(C, L)
+
+
+def _main(C: int = 4, L: int = 2) -> None:
     from repro.core import isa_kernels, make_machine
     from repro.core.layout import mem_to_striped_host
 

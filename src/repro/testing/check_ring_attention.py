@@ -12,17 +12,23 @@ from __future__ import annotations
 import sys
 
 import jax
-
-jax.config.update("jax_enable_x64", False)
-
 import jax.numpy as jnp
 import numpy as np
+
+from repro.testing.x64 import x64_mode
 
 #: |hier - flat| bound: same softmax terms, re-associated combine (f32)
 REASSOC_TOL = 2e-6
 
 
 def main(n: int = 8) -> None:
+    # the f32 reassociation bounds assume x64 OFF, scoped via x64_mode
+    # (flag restored + tamper-asserted on exit; import-clean)
+    with x64_mode(False):
+        _main(n)
+
+
+def _main(n: int = 8) -> None:
     from repro.kernels import ref
     from repro.parallel.ring_attention import ring_attention
     from repro.topology import Topology

@@ -21,12 +21,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.testing.x64 import x64_mode
+
 
 def main(n: int = 8) -> None:
-    # Configure x64 here, not at import time: the tier-1 import sweep loads
-    # this module in-process, and flipping the global flag there leaks into
-    # later float32 tests (the check itself always runs as a subprocess).
-    jax.config.update("jax_enable_x64", True)
+    # float64 scoped via x64_mode (restore + tamper-assert on exit) — never
+    # at import time (the tier-1 import sweep loads this module in-process)
+    with x64_mode(True):
+        _main(n)
+
+
+def _main(n: int = 8) -> None:
     from repro.core import make_machine
     from repro.sim import araxl_params
     from repro.topology import HIERARCHIES, factorizations

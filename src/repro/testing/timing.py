@@ -1,0 +1,27 @@
+"""Steady-state wall-clock helper for the multi-device checks.
+
+Single-shot timings on the CI hosts jump by integer factors with scheduler
+noise; every ``coll/`` / ``ringattn/`` CSV row therefore reports the
+*median* of ``reps`` compiled executions after ``warmup`` discarded calls.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+
+
+def median_time_us(fn, *args, reps: int = 10, warmup: int = 2) -> float:
+    """Compiled-execution microseconds: jit once, ``warmup`` discarded
+    steady-state calls, then the median of ``reps`` timed calls."""
+    jfn = jax.jit(fn)
+    jax.block_until_ready(jfn(*args))          # compile
+    for _ in range(warmup):
+        jax.block_until_ready(jfn(*args))
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(samples)

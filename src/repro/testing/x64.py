@@ -1,0 +1,37 @@
+"""Scoped ``jax_enable_x64`` control for the multi-device check modules.
+
+Historically every ``repro.testing.check_*`` module toggled
+``jax.config.update("jax_enable_x64", ...)`` at *import* time.  Because the
+tier-1 import sweep loads modules in alphabetical order, whichever check
+imported last decided the flag for the rest of the process — float64 leaks
+in later tests were masked or revealed by import order alone.
+
+:func:`x64_mode` replaces that: the flag is flipped only around the check's
+``main`` body, restored on exit (exceptions included), and the context
+asserts nothing inside re-toggled it behind its back — so a check module is
+import-clean and execution-clean by construction.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+@contextlib.contextmanager
+def x64_mode(enabled: bool):
+    """Run the body under ``jax_enable_x64=enabled``; save/restore around it.
+
+    On exit the flag must still hold the value this context set (anything
+    else means the body leaked its own toggle — the import-order trap this
+    module exists to kill), then the previous value is restored.
+    """
+    prev = bool(jax.config.jax_enable_x64)
+    jax.config.update("jax_enable_x64", enabled)
+    try:
+        yield
+        assert bool(jax.config.jax_enable_x64) == enabled, (
+            f"jax_enable_x64 changed to {jax.config.jax_enable_x64} inside "
+            f"an x64_mode({enabled}) block — toggle through x64_mode only")
+    finally:
+        jax.config.update("jax_enable_x64", prev)

@@ -481,6 +481,17 @@ class Topology:
         hierarchy = "flat" if self.hierarchy == "flat" else None
         return Topology(levels=lvls, hierarchy=hierarchy)
 
+    @classmethod
+    def from_describe(cls, d: dict) -> "Topology":
+        """Rebuild a Topology from a :meth:`describe` record (the JSON the
+        dry-run / perf artifacts store), levels, prices, and hierarchy
+        intact — so recorded artifacts can be re-priced offline."""
+        levels = [Level(tuple(l["axis"]) if isinstance(l["axis"], list)
+                        else l["axis"], l["size"], l["hop_lat"],
+                        l.get("wire_bw"))
+                  for l in d["levels"]]
+        return cls(levels=levels, hierarchy=d["hierarchy"])
+
     def describe(self) -> dict:
         """JSON-friendly record (benchmarks / dry-run artifacts)."""
         return {

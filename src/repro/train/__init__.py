@@ -1,7 +1,7 @@
 from .optimizer import OptConfig, adamw_init, adamw_update, lr_schedule
-from .trainer import (TrainState, make_grad_sync, make_train_step,
-                      train_state_defs)
+from .trainer import (TrainState, init_train_state, make_grad_sync,
+                      make_train_step, train_state_defs)
 
 __all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_schedule",
-           "TrainState", "make_grad_sync", "make_train_step",
-           "train_state_defs"]
+           "TrainState", "init_train_state", "make_grad_sync",
+           "make_train_step", "train_state_defs"]

@@ -24,7 +24,8 @@ def train_state_defs(cfg: ModelConfig, opt_cfg: OptConfig):
     return pdefs, opt_state_defs(pdefs, opt_cfg)
 
 
-def make_grad_sync(cfg: ModelConfig, rules: ShardingRules):
+def make_grad_sync(cfg: ModelConfig, rules: ShardingRules,
+                   bucket_mb: float | None = None):
     """Hierarchical gradient-sync hook for ``make_train_step(grad_sync=)``.
 
     Pins each accumulated gradient to its parameter's sharding under
@@ -36,14 +37,66 @@ def make_grad_sync(cfg: ModelConfig, rules: ShardingRules):
     analogue of ``core.ring.ring_reduce_scatter_local_hier`` (lane ring
     first, pod ring last), expressed as sharding rules + a hook instead of
     monkey-patching.
+
+    ``bucket_mb`` selects the *bucketed, backward-overlapped* variant
+    (``fsdp_hier_ov`` in ``launch.perf``): gradients are grouped — in
+    reverse parameter order, the order backprop produces them — into
+    buckets of at most ``bucket_mb`` MiB, and each bucket is pinned and
+    fenced with ``jax.lax.optimization_barrier``.  The fences stop XLA
+    from coalescing every gradient into one monolithic end-of-step sync,
+    so each bucket's inner-ring reduce-scatter is free to start as soon as
+    its gradients exist and ride the wires under the remaining backward
+    compute; the pod-ring exchange still happens last, at the optimizer's
+    replicated reads.  Barriers and sharding constraints are identity
+    functions, so the result is grad-equivalent to the unbucketed hook.
     """
     shardings = param_shardings(lm.model_defs(cfg), rules)
 
+    if bucket_mb is None:
+        def sync(grads):
+            return jax.tree.map(
+                lambda g, s: g if s is None
+                else jax.lax.with_sharding_constraint(g, s),
+                grads, shardings)
+
+        return sync
+
+    bucket_bytes = int(bucket_mb * 2**20)
+
     def sync(grads):
-        return jax.tree.map(
-            lambda g, s: g if s is None
-            else jax.lax.with_sharding_constraint(g, s),
-            grads, shardings)
+        leaves, treedef = jax.tree.flatten(grads)
+        # keep None leaves (mesh-less rules: nothing to pin, buckets still
+        # fence) — a bare flatten would drop them and misalign the zip
+        shs = jax.tree.flatten(shardings,
+                               is_leaf=lambda x: x is None)[0]
+        assert len(leaves) == len(shs), (len(leaves), len(shs))
+        out = list(leaves)
+        bucket: list[int] = []
+        size = 0
+
+        def flush():
+            if not bucket:
+                return
+            pinned = tuple(
+                out[i] if shs[i] is None
+                else jax.lax.with_sharding_constraint(out[i], shs[i])
+                for i in bucket)
+            fenced = jax.lax.optimization_barrier(pinned)
+            for i, g in zip(bucket, fenced):
+                out[i] = g
+            bucket.clear()
+
+        # reverse parameter order: the tail of the model backprops first,
+        # so its bucket's reduce-scatter can launch while earlier layers'
+        # gradients are still being computed
+        for i in reversed(range(len(leaves))):
+            bucket.append(i)
+            size += leaves[i].size * leaves[i].dtype.itemsize
+            if size >= bucket_bytes:
+                flush()
+                size = 0
+        flush()
+        return jax.tree.unflatten(treedef, out)
 
     return sync
 

@@ -40,3 +40,34 @@ def test_sweep_finds_the_tree():
 @pytest.mark.parametrize("name", MODULES)
 def test_module_imports(name):
     importlib.import_module(name)
+
+
+def test_imports_leave_x64_flag_alone():
+    """No module — the check_* suite especially — may flip jax_enable_x64 at
+    import time: the alphabetical sweep order used to decide the flag for
+    every later test (float64 leaks masked or revealed by import order).
+    Checks scope the flag with repro.testing.x64.x64_mode instead.
+
+    Runs in a fresh subprocess: in this process the parametrized sweep above
+    has already cached every module in sys.modules, so a re-import here
+    would be a no-op and could never catch a reintroduced import-time flip.
+    """
+    import os
+    import subprocess
+    import sys
+    code = (
+        "import importlib, jax\n"
+        "before = bool(jax.config.jax_enable_x64)\n"
+        f"for name in {MODULES!r}:\n"
+        "    importlib.import_module(name)\n"
+        "    assert bool(jax.config.jax_enable_x64) == before, \\\n"
+        "        f'importing {name} flipped jax_enable_x64'\n"
+        "print('x64-clean')\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_ROOT.parent) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0 and "x64-clean" in proc.stdout, \
+        proc.stdout + proc.stderr
