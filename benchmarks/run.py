@@ -48,12 +48,13 @@ import argparse
 import json
 import pathlib
 import sys
-import time
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
 
 import numpy as np
+
+from repro.testing.timing import now
 
 KERNELS = ["fmatmul", "fconv2d", "jacobi2d", "fdotproduct", "exp", "softmax"]
 
@@ -63,10 +64,10 @@ BENCH: dict = {}
 
 def _t(fn, *args, reps=3, **kw):
     fn(*args, **kw)
-    t0 = time.perf_counter()
+    t0 = now()
     for _ in range(reps):
         out = fn(*args, **kw)
-    return (time.perf_counter() - t0) / reps * 1e6, out
+    return (now() - t0) / reps * 1e6, out
 
 
 def bench_fig6(hierarchies=("flat", "two-level")):
@@ -264,9 +265,9 @@ def bench_kernels():
 
 def bench_ring():
     from repro.testing.subproc import run_check
-    t0 = time.perf_counter()
+    t0 = now()
     run_check("repro.testing.check_core", "2", "4", devices=8)
-    us = (time.perf_counter() - t0) * 1e6
+    us = (now() - t0) * 1e6
     print(f"ring/core_suite_8dev,{us:.0f},all-modes-allclose")
 
 

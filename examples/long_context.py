@@ -14,14 +14,13 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
 from repro.parallel.ring_attention import ring_attention
+from repro.testing.timing import now
 from repro.topology import Topology
 
 
@@ -39,9 +38,9 @@ def main():
     fn = jax.jit(lambda q, k, v: ring_attention(q, k, v, mesh, topology=topo,
                                                 causal=True, window=512))
     out = fn(q, k, v)                             # compile + run
-    t0 = time.time()
+    t0 = now()
     out = jax.block_until_ready(fn(q, k, v))
-    dt = time.time() - t0
+    dt = now() - t0
 
     want = ref.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                          v.transpose(0, 2, 1, 3), causal=True,

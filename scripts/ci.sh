@@ -10,6 +10,15 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 
+# Static analysis (fails the build on any finding): the AST lint runs
+# everywhere; the semantic front (collective pricing coverage, ring
+# schedules, VRF budgets) traces the public entry points on the 8 fake CPU
+# devices exported above.  The bench validator pins every BENCH_sim.json
+# section schema in one place.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis.bench
+echo "analysis OK (L1-L4 lint, S1-S3 semantic, bench schemas)"
+
 # Tier-1 pytest (includes tests/test_docs.py, which executes every fenced
 # python block in docs/*.md in an 8-fake-device subprocess — the docs are
 # part of the contract, not prose).

@@ -1,0 +1,47 @@
+"""CLI: ``python -m repro.analysis`` — run both fronts, exit 1 on any
+finding.  The semantic front shard_maps over 8 devices, so the fake-device
+env is set *here*, before anything imports jax — safe because ``-m`` always
+starts a fresh interpreter (library code must never do this; that is
+exactly lint rule L2's env sub-rule)."""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="substrate-hygiene lint + collective/ring/VRF "
+                    "semantic analysis")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="skip the semantic front (no jax import)")
+    ap.add_argument("--root", default=None,
+                    help="repo root to lint (default: this checkout)")
+    args = ap.parse_args(argv)
+
+    if not args.lint_only:
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        flag = "--xla_force_host_platform_device_count=8"
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = f"{flag} {flags}".strip()
+
+    from repro.analysis import RULES, run_repo_analysis
+    findings = run_repo_analysis(root=args.root,
+                                 semantic=not args.lint_only)
+    for f in findings:
+        print(f)
+    active = [r for r in RULES if args.lint_only is False or
+              r.startswith("L")]
+    if findings:
+        print(f"repro.analysis: {len(findings)} finding(s) "
+              f"({', '.join(sorted({f.rule for f in findings}))})")
+        return 1
+    print(f"repro.analysis: clean ({', '.join(active)} active)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

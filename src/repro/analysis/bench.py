@@ -1,0 +1,323 @@
+"""Pinned-schema validation for ``BENCH_sim.json`` — one place, every
+section.
+
+Before this module the schema knowledge lived as scattered asserts in
+``tests/test_overlap.py`` / ``test_roofline_levels.py`` / ``test_topology``;
+each new benchmark section meant another ad-hoc copy.  Now the tests import
+:func:`validate_section` and keep only their *numeric* pins (calibration
+values stay where the reproduction story is told); structural drift is
+caught here and by ``python -m repro.analysis.bench`` in CI.
+
+The validators check shape + internal consistency (key sets, positivity,
+per-level exposure caps), never calibration numbers — re-recording a
+benchmark must not require touching this file unless the *schema* moved.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from repro.analysis import repo_root
+
+#: the fig6 kernel set (paper Figure 6)
+KERNELS = ("fmatmul", "fconv2d", "jacobi2d", "fdotproduct", "exp", "softmax")
+
+#: coll schedule variants; ``reduce`` has no double-buffered twin (the
+#: recursive-doubling allreduce is already latency-optimal)
+COLL_VARIANTS = ("flat", "two-level", "xla")
+COLL_DB_VARIANTS = COLL_VARIANTS + ("flat-db", "two-level-db")
+
+#: every perf strategy record carries exactly these fields
+PERF_KEYS = {"bottleneck", "collective_s", "collective_s_by_level",
+             "collective_s_flat_hw", "exposed_collective_s",
+             "exposed_collective_s_by_level", "mfu_upper_bound",
+             "wire_bytes_by_level"}
+
+OVERLAP_KEYS = {"baseline", "overlap", "exposed_cycles",
+                "exposed_cycles_overlap", "hidden_cycles_overlap"}
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _pos(v) -> bool:
+    return _is_num(v) and v > 0
+
+
+def _require(mapping, keys, where: str, problems: list,
+             exact: bool = False) -> bool:
+    if not isinstance(mapping, dict):
+        problems.append(f"{where}: expected a mapping, got "
+                        f"{type(mapping).__name__}")
+        return False
+    missing = set(keys) - set(mapping)
+    if missing:
+        problems.append(f"{where}: missing keys {sorted(missing)}")
+        return False
+    if exact and set(mapping) != set(keys):
+        problems.append(f"{where}: unexpected keys "
+                        f"{sorted(set(mapping) - set(keys))}")
+    return True
+
+
+def _all_pos(mapping, where: str, problems: list) -> None:
+    for k, v in mapping.items():
+        if not _pos(v):
+            problems.append(f"{where}[{k}]: expected a positive number, "
+                            f"got {v!r}")
+
+
+# ---------------------------------------------------------------------------
+# per-section validators
+# ---------------------------------------------------------------------------
+
+def _v_coll(coll, problems):
+    if not _require(coll, ("C4L2", "C2L4"), "coll", problems):
+        return
+    for tag, ops in coll.items():
+        if not _require(ops, ("reduce", "allgather", "reduce_scatter",
+                              "glsu_load"), f"coll[{tag}]", problems):
+            continue
+        for op, variants in ops.items():
+            if op in ("allgather", "reduce_scatter"):
+                need = COLL_DB_VARIANTS
+            elif op == "glsu_load":              # no XLA-native twin: the
+                need = ("flat", "two-level")     # GLSU load is ring-only
+            else:
+                need = COLL_VARIANTS
+            if _require(variants, need, f"coll[{tag}][{op}]", problems):
+                _all_pos(variants, f"coll[{tag}][{op}]", problems)
+
+
+def _v_fig6(fig6, problems):
+    if not _require(fig6, ("flat", "two-level"), "fig6", problems):
+        return
+    for hier, kernels in fig6.items():
+        if not _require(kernels, KERNELS, f"fig6[{hier}]", problems):
+            continue
+        for k, by_lanes in kernels.items():
+            if _require(by_lanes, ("8", "16", "32", "64"),
+                        f"fig6[{hier}][{k}]", problems):
+                _all_pos(by_lanes, f"fig6[{hier}][{k}]", problems)
+
+
+def _v_fig6_ablation_64(abl, problems):
+    if not _require(abl, KERNELS, "fig6_ablation_64", problems):
+        return
+    for k, row in abl.items():
+        if _require(row, ("flat", "two-level"), f"fig6_ablation_64[{k}]",
+                    problems):
+            _all_pos(row, f"fig6_ablation_64[{k}]", problems)
+
+
+def _v_fig6_grid_64(grid, problems):
+    if not isinstance(grid, dict) or not grid:
+        problems.append("fig6_grid_64: expected a non-empty mapping")
+        return
+    for tag, row in grid.items():
+        if not (tag.startswith("C") and "xL" in tag):
+            problems.append(f"fig6_grid_64: tag {tag!r} is not CNxLM")
+        if _require(row, ("fdotproduct", "red_tree_lat", "softmax"),
+                    f"fig6_grid_64[{tag}]", problems):
+            _all_pos(row, f"fig6_grid_64[{tag}]", problems)
+
+
+def _v_fig6_overlap_64(ov, problems):
+    if not _require(ov, KERNELS, "fig6_overlap_64", problems):
+        return
+    for k, row in ov.items():
+        where = f"fig6_overlap_64[{k}]"
+        if not _require(row, OVERLAP_KEYS, where, problems, exact=True):
+            continue
+        if not all(_is_num(v) for v in row.values()):
+            problems.append(f"{where}: non-numeric entries")
+            continue
+        if row["overlap"] < row["baseline"]:
+            problems.append(f"{where}: overlap ({row['overlap']}) below "
+                            f"baseline ({row['baseline']}) — backfilling "
+                            f"bubbles can only help")
+        if row["exposed_cycles_overlap"] > row["exposed_cycles"]:
+            problems.append(f"{where}: overlap increased exposed cycles")
+
+
+def _v_fig6_pod_64(pod, problems):
+    if not isinstance(pod, dict) or not pod:
+        problems.append("fig6_pod_64: expected a non-empty mapping")
+        return
+    for tag, row in pod.items():
+        if _require(row, ("fdotproduct", "n_levels", "red_tree_lat",
+                          "softmax"), f"fig6_pod_64[{tag}]", problems):
+            _all_pos(row, f"fig6_pod_64[{tag}]", problems)
+
+
+def _v_fig7(fig7, problems):
+    if not isinstance(fig7, dict) or not fig7:
+        problems.append("fig7: expected a non-empty mapping")
+        return
+    for variant, kernels in fig7.items():
+        if not isinstance(kernels, dict) or not kernels:
+            problems.append(f"fig7[{variant}]: expected kernel mapping")
+            continue
+        for k, v in kernels.items():             # ablation deltas: a kernel
+            if not _is_num(v) or v < 0:          # insensitive to the extra
+                problems.append(                 # resource records 0.0
+                    f"fig7[{variant}][{k}]: expected a non-negative "
+                    f"number, got {v!r}")
+
+
+def _v_perf(perf, problems):
+    if not isinstance(perf, dict) or not perf:
+        problems.append("perf: expected a non-empty mapping")
+        return
+    for cell, strategies in perf.items():
+        if not isinstance(strategies, dict) or not strategies:
+            problems.append(f"perf[{cell}]: expected strategy mapping")
+            continue
+        for strat, entry in strategies.items():
+            where = f"perf[{cell}][{strat}]"
+            if not _require(entry, PERF_KEYS, where, problems):
+                continue
+            by = entry["collective_s_by_level"]
+            exp = entry["exposed_collective_s_by_level"]
+            wb = entry["wire_bytes_by_level"]
+            for name, lv in (("collective_s_by_level", by),
+                             ("exposed_collective_s_by_level", exp),
+                             ("wire_bytes_by_level", wb)):
+                if not isinstance(lv, dict):
+                    problems.append(f"{where}.{name}: expected mapping")
+                    break
+            else:
+                if set(exp) != set(by):
+                    problems.append(
+                        f"{where}: exposure labels {sorted(exp)} != "
+                        f"pricing labels {sorted(by)}")
+                for lab in set(exp) & set(by):
+                    if not -1e-12 <= exp[lab] <= by[lab] + 1e-12:
+                        problems.append(
+                            f"{where}[{lab}]: exposed {exp[lab]} outside "
+                            f"[0, collective {by[lab]}]")
+                tot = sum(exp.values())
+                if abs(entry["exposed_collective_s"] - tot) > \
+                        1e-9 * max(1.0, tot):
+                    problems.append(
+                        f"{where}: exposed_collective_s != sum of levels")
+                if entry["exposed_collective_s"] > \
+                        entry["collective_s"] + 1e-12:
+                    problems.append(
+                        f"{where}: exposed exceeds total collective time")
+
+
+def _v_red_tree_lat_64(cal, problems):
+    if _require(cal, ("flat", "two-level"), "red_tree_lat_64", problems):
+        _all_pos(cal, "red_tree_lat_64", problems)
+
+
+def _v_ring_attention_8dev(ra, problems):
+    if not _require(ra, ("flat", "hier2x2x2"), "ring_attention_8dev",
+                    problems):
+        return
+    for case, row in ra.items():
+        where = f"ring_attention_8dev[{case}]"
+        if _require(row, ("seq", "db"), where, problems, exact=True):
+            _all_pos(row, where, problems)
+
+
+def _v_tab1(tab1, problems):
+    if not isinstance(tab1, dict) or not tab1:
+        problems.append("tab1: expected a non-empty mapping")
+        return
+    for k, row in tab1.items():
+        if _require(row, ("flop_per_cycle", "peak"), f"tab1[{k}]",
+                    problems):
+            _all_pos(row, f"tab1[{k}]", problems)
+
+
+def _v_tab2(tab2, problems):
+    if not _require(tab2, ("16", "32", "64"), "tab2", problems):
+        return
+    for lanes, row in tab2.items():
+        if _require(row, ("err_pct", "model_kge", "paper_kge"),
+                    f"tab2[{lanes}]", problems):
+            for k, v in row.items():
+                if not _is_num(v):
+                    problems.append(f"tab2[{lanes}][{k}]: non-numeric")
+
+
+def _v_tab3(tab3, problems):
+    if not _require(tab3, ("16", "32", "64"), "tab3", problems):
+        return
+    for lanes, row in tab3.items():
+        where = f"tab3[{lanes}]"
+        if not _require(row, ("area_eff", "energy_eff", "paper",
+                              "perf_gflops"), where, problems):
+            continue
+        if not isinstance(row["paper"], list):
+            problems.append(f"{where}[paper]: expected a list")
+        for k in ("area_eff", "energy_eff", "perf_gflops"):
+            if not _pos(row[k]):
+                problems.append(f"{where}[{k}]: expected positive number")
+
+
+VALIDATORS = {
+    "coll": _v_coll,
+    "fig6": _v_fig6,
+    "fig6_ablation_64": _v_fig6_ablation_64,
+    "fig6_grid_64": _v_fig6_grid_64,
+    "fig6_overlap_64": _v_fig6_overlap_64,
+    "fig6_pod_64": _v_fig6_pod_64,
+    "fig7": _v_fig7,
+    "perf": _v_perf,
+    "red_tree_lat_64": _v_red_tree_lat_64,
+    "ring_attention_8dev": _v_ring_attention_8dev,
+    "tab1": _v_tab1,
+    "tab2": _v_tab2,
+    "tab3": _v_tab3,
+}
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def validate_section(name: str, value) -> list[str]:
+    """Schema problems for one recorded section (empty when clean)."""
+    if name not in VALIDATORS:
+        return [f"{name}: unknown BENCH_sim.json section — add a pinned "
+                f"validator in repro.analysis.bench"]
+    problems: list[str] = []
+    VALIDATORS[name](value, problems)
+    return problems
+
+
+def validate_bench(bench: dict) -> list[str]:
+    """All sections, plus unknown-section detection; sections are allowed
+    to be absent (benchmarks record incrementally) but never malformed."""
+    problems: list[str] = []
+    for name, value in sorted(bench.items()):
+        problems += validate_section(name, value)
+    return problems
+
+
+def load_bench(root: pathlib.Path | None = None) -> dict:
+    root = pathlib.Path(root) if root is not None else repo_root()
+    return json.loads((root / "BENCH_sim.json").read_text())
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = pathlib.Path(argv[0]) if argv else repo_root()
+    bench = load_bench(root)
+    problems = validate_bench(bench)
+    for p in problems:
+        print(f"BENCH_sim.json: {p}")
+    if problems:
+        print(f"repro.analysis.bench: {len(problems)} problem(s)")
+        return 1
+    print(f"repro.analysis.bench: {len(bench)} sections OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,163 @@
+"""Front 2a — S2, ring-schedule safety.
+
+Two failure classes the RINGI discipline must never ship:
+
+* **deadlock / partial rings** — a ``ppermute`` whose permutation is not a
+  uniform circular shift covering the whole ring.  On a physical ring a
+  non-bijective or partial permutation leaves some device waiting on a hop
+  nobody sends (the odometer deadlock); a non-uniform shift means different
+  devices cross different numbers of wires per step, so the schedule's cost
+  model (hops x hop_lat) silently misprices.  Uniform shifts with
+  ``gcd(shift, n) > 1`` are *legal* — recursive doubling (shift 2, 4, ...)
+  decomposes into gcd-many disjoint cycles that all advance in lockstep.
+
+* **in-flight aliasing races** — a donated Pallas buffer
+  (``input_output_aliases``) that some *other* equation still reads: the
+  in-place write races the read once the backend really aliases.
+
+This module is jax-free on purpose (it only walks jaxpr data structures
+handed to it), so the pure permutation check is unit-testable anywhere.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterator, Sequence
+
+from repro.analysis import Finding
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking (duck-typed: works on Jaxpr objects without importing jax)
+# ---------------------------------------------------------------------------
+
+def _subjaxprs(v):
+    vals = v if isinstance(v, (tuple, list)) else (v,)
+    for x in vals:
+        inner = getattr(x, "jaxpr", x)        # ClosedJaxpr -> Jaxpr
+        if hasattr(inner, "eqns"):
+            yield inner
+
+
+def walk_jaxprs(jaxpr) -> Iterator:
+    """Yield ``jaxpr`` and every sub-jaxpr reachable through eqn params
+    (pjit bodies, shard_map bodies, scan/cond branches, pallas kernels)."""
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from walk_jaxprs(sub)
+
+
+def iter_eqns(jaxpr, mesh=None) -> Iterator[tuple]:
+    """Yield ``(eqn, enclosing_mesh)`` over every equation recursively; the
+    mesh is the innermost ``shard_map`` mesh the equation sits under."""
+    for eqn in jaxpr.eqns:
+        m = eqn.params.get("mesh", mesh) \
+            if eqn.primitive.name == "shard_map" else mesh
+        yield eqn, m
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from iter_eqns(sub, m)
+
+
+def axis_tuple(axis_name) -> tuple[str, ...]:
+    return (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+
+
+# ---------------------------------------------------------------------------
+# S2a — permutation safety
+# ---------------------------------------------------------------------------
+
+def check_ring_permutation(perm: Sequence[tuple[int, int]],
+                           n: int) -> list[str]:
+    """Problems with one ppermute permutation on an ``n``-ring (empty list
+    when the permutation is a full-ring uniform circular shift)."""
+    pairs = [tuple(p) for p in perm]
+    problems = []
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    bad = [p for p in pairs
+           if not (0 <= p[0] < n and 0 <= p[1] < n)]
+    if bad:
+        problems.append(f"pairs {bad} outside the {n}-ring")
+        return problems
+    if len(set(srcs)) != len(srcs):
+        problems.append("duplicate sources (one buffer sent twice)")
+    if len(set(dsts)) != len(dsts):
+        problems.append("duplicate destinations (receive-side write race)")
+    if problems:
+        return problems
+    if len(pairs) != n or set(srcs) != set(range(n)):
+        idle = sorted(set(range(n)) - set(srcs))
+        problems.append(
+            f"partial ring: positions {idle} send nothing — their "
+            f"neighbours wait forever (odometer deadlock)")
+        return problems
+    shifts = {(d - s) % n for s, d in pairs}
+    if len(shifts) != 1:
+        problems.append(
+            f"non-uniform shift {sorted(shifts)}: hops differ per device, "
+            f"so the ring cost model (hops x hop_lat) misprices")
+    elif shifts == {0}:
+        problems.append("zero shift (identity permutation moves no data)")
+    return problems
+
+
+def check_ppermute_schedules(closed_jaxpr, label: str) -> list[Finding]:
+    """Run :func:`check_ring_permutation` on every traced ``ppermute``."""
+    findings = []
+    for eqn, mesh in iter_eqns(closed_jaxpr.jaxpr):
+        if eqn.primitive.name != "ppermute":
+            continue
+        axes = axis_tuple(eqn.params["axis_name"])
+        perm = eqn.params["perm"]
+        if mesh is not None:
+            n = math.prod(dict(mesh.shape)[a] for a in axes)
+        else:                                  # no mesh in scope: best effort
+            n = 1 + max(max(s, d) for s, d in perm)
+        for prob in check_ring_permutation(perm, n):
+            findings.append(Finding(
+                "S2", label, 0,
+                f"ppermute over {axes} (ring of {n}): {prob}",
+                "build shifts with repro.core.ring._shift_perm so every "
+                "step is a full-ring uniform circular shift"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# S2b — donation / input_output_aliases race detector
+# ---------------------------------------------------------------------------
+
+def check_aliasing(closed_jaxpr, label: str) -> list[Finding]:
+    """A Pallas input aliased onto an output is written in place; if any
+    other equation (or the jaxpr's own outputs) still reads that buffer,
+    the double-buffered schedule has an in-flight race."""
+    findings = []
+    for jx in walk_jaxprs(closed_jaxpr.jaxpr):
+        uses: dict = {}
+        def _is_var(v):                      # Vars only; Literals (which
+            return hasattr(v, "aval") and not hasattr(v, "val")  # are unhashable) carry .val
+        for eqn in jx.eqns:
+            for v in eqn.invars:
+                if _is_var(v):
+                    uses[v] = uses.get(v, 0) + 1
+        for v in jx.outvars:
+            if _is_var(v):
+                uses[v] = uses.get(v, 0) + 1
+        for eqn in jx.eqns:
+            if eqn.primitive.name != "pallas_call":
+                continue
+            for in_idx, out_idx in (
+                    eqn.params.get("input_output_aliases") or ()):
+                if in_idx >= len(eqn.invars):
+                    continue
+                v = eqn.invars[in_idx]
+                if _is_var(v) and uses.get(v, 0) > 1:
+                    findings.append(Finding(
+                        "S2", label, 0,
+                        f"pallas input {in_idx} is donated to output "
+                        f"{out_idx} but another op still reads the same "
+                        f"buffer — in-flight aliasing race",
+                        "drop input_output_aliases for buffers with other "
+                        "consumers, or copy before donating"))
+    return findings

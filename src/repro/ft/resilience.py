@@ -24,8 +24,9 @@ program stays a pure SPMD step):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
+
+from repro.testing.timing import now
 
 
 @dataclasses.dataclass
@@ -37,7 +38,7 @@ class HostState:
 
 class HeartbeatMonitor:
     def __init__(self, n_hosts: int, timeout_s: float = 60.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = now):
         self.timeout = timeout_s
         self.clock = clock
         self.hosts = {h: HostState(last_beat=clock()) for h in range(n_hosts)}
@@ -119,7 +120,7 @@ def plan_rescale(old_devices: int, lost_hosts: int, devices_per_host: int,
 
 class RestartPolicy:
     def __init__(self, max_restarts: int = 10, backoff_s: float = 5.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = now):
         self.max_restarts = max_restarts
         self.backoff = backoff_s
         self.clock = clock

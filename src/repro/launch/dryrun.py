@@ -35,7 +35,6 @@ import argparse
 import dataclasses
 import json
 import pathlib
-import time
 import traceback
 
 import jax
@@ -55,6 +54,7 @@ from repro.roofline.analysis import (HW, collective_bytes,
                                      level_wire_seconds, memory_model_bytes,
                                      parse_collectives, resident_model_bytes,
                                      roofline_terms, wire_seconds)
+from repro.testing.timing import now
 from repro.topology import Topology
 from repro.train import OptConfig, TrainState, make_train_step
 from repro.train.optimizer import opt_state_defs
@@ -198,7 +198,7 @@ def analyse_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
     trainer's gradient-sync hook.
     """
     n_dev = mesh.devices.size
-    t0 = time.time()
+    t0 = now()
     rec = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
            "devices": int(n_dev), "kind": shape.kind}
     if topology is not None:
@@ -233,7 +233,7 @@ def analyse_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
     rec["mem_per_device"]["resident_model_gib"] = resident / 2**30
     rec["fits_16gib_hbm"] = bool(resident < 16 * 2**30)
     rec["cpu_arena_exceeds"] = bool(live >= 16 * 2**30)
-    rec["compile_s_full"] = round(time.time() - t0, 1)
+    rec["compile_s_full"] = round(now() - t0, 1)
     del compiled, lowered
 
     # 1- and 2-period UNROLLED variants at per-microbatch shape:
@@ -306,7 +306,7 @@ def analyse_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
     rec["roofline"]["mfu_upper_bound"] = (
         mf / n_dev / HW["peak_flops"] / rec["roofline"]["step_s_lower_bound"]
         if rec["roofline"]["step_s_lower_bound"] else 0.0)
-    rec["elapsed_s"] = round(time.time() - t0, 1)
+    rec["elapsed_s"] = round(now() - t0, 1)
     return rec
 
 

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -11,6 +10,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.models import lm
 from repro.parallel.sharding import default_rules, init_params
 from repro.serve import Request, ServeConfig, ServingEngine
+from repro.testing.timing import now
 
 
 def run(arch: str, *, smoke: bool = True, n_requests: int = 6,
@@ -22,13 +22,13 @@ def run(arch: str, *, smoke: bool = True, n_requests: int = 6,
     eng = ServingEngine(cfg, params, rules,
                         ServeConfig(max_batch=max_batch, max_seq=max_seq))
     rng = np.random.default_rng(seed)
-    t0 = time.time()
+    t0 = now()
     for rid in range(n_requests):
         plen = int(rng.integers(4, 24))
         prompt = rng.integers(1, cfg.vocab_size, plen).astype(np.int32)
         eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=max_new))
     finished = eng.run()
-    dt = time.time() - t0
+    dt = now() - t0
     toks = sum(len(r.out) for r in finished)
     print(f"[serve] {len(finished)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s incl. compile)")

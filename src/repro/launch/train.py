@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +22,7 @@ from repro.ft import HeartbeatMonitor, StragglerMitigator
 from repro.models import lm
 from repro.parallel.sharding import (abstract_params, default_rules,
                                      init_params, param_shardings)
+from repro.testing.timing import now
 from repro.train import OptConfig, TrainState, make_train_step
 from repro.train.optimizer import adamw_init
 
@@ -57,7 +57,7 @@ def run(arch: str, *, smoke: bool = True, steps: int = 50,
     monitor = HeartbeatMonitor(n_hosts=1)
     straggler = StragglerMitigator()
     losses = []
-    t_prev = time.time()
+    t_prev = now()
     for step in range(start_step, steps):
         tokens = jnp.asarray(next(pipe))
         batch = {"tokens": tokens}
@@ -70,8 +70,8 @@ def run(arch: str, *, smoke: bool = True, steps: int = 50,
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
         losses.append(loss)
-        dt = time.time() - t_prev
-        t_prev = time.time()
+        dt = now() - t_prev
+        t_prev = now()
         monitor.beat(0, step, dt)
         straggler.update({0: monitor.hosts[0].ewma_step_s})
         if step % log_every == 0 or step == steps - 1:

@@ -214,7 +214,7 @@ def attn_layer_decode(p, x, cache: AttnCache, pos, cfg: ModelConfig,
         cspec = rules.spec(("batch", "cache_seq", "kv", ""))
 
         def body(qg_, ckb, cvb, kb, vb, pos_):
-            base = jax.lax.axis_index("model") * W_loc
+            base = substrate.axis_index("model") * W_loc
             sl = pos_ % W
             ls = jnp.clip(sl - base, 0, W_loc - 1)
             inrange = (sl >= base) & (sl < base + W_loc)

@@ -199,7 +199,7 @@ def embed_tokens(params, tokens, cfg: ModelConfig, rules: ShardingRules):
     bspec = rules.spec(("batch", ""))
 
     def body(tok, emb):
-        lo = jax.lax.axis_index("model") * V_loc
+        lo = substrate.axis_index("model") * V_loc
         ids = tok - lo
         ok = (ids >= 0) & (ids < V_loc)
         safe = jnp.where(ok, ids, 0)

@@ -1,8 +1,10 @@
 """Run a repro.testing check module in a subprocess with N fake devices.
 
-The main pytest process must keep 1 device (mandated), so every multi-device
-correctness check runs as ``python -m repro.testing.<module>`` with
-``XLA_FLAGS=--xla_force_host_platform_device_count=N`` in the child env.
+The child gets exactly N devices regardless of what the parent inherited
+(``tests/conftest.py`` sets 8 idempotently for the main pytest process),
+so every multi-device correctness check runs as
+``python -m repro.testing.<module>`` with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` pinned in its env.
 """
 from __future__ import annotations
 

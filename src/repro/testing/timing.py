@@ -1,27 +1,43 @@
-"""Steady-state wall-clock helper for the multi-device checks.
+"""The repo's single wall-clock authority (lint rule L4).
 
 Single-shot timings on the CI hosts jump by integer factors with scheduler
 noise; every ``coll/`` / ``ringattn/`` CSV row therefore reports the
 *median* of ``reps`` compiled executions after ``warmup`` discarded calls.
+Everything else that needs a clock — elapsed-seconds progress lines,
+benchmark stopwatches — goes through :func:`now`, so clock discipline
+(monotonic vs wall, steady-state medians) is decided in exactly one file.
+
+jax is imported lazily: the sim-only benchmark sections and the lint
+front must stay importable without pulling in the runtime.
 """
 from __future__ import annotations
 
 import statistics
 import time
 
-import jax
+
+def now() -> float:
+    """Monotonic seconds — the only sanctioned raw clock read.
+
+    Monotonic on purpose: every in-repo use is an *interval* (elapsed
+    training seconds, tokens/s, benchmark stopwatches), where wall clocks
+    lie under NTP slew.  Timestamps-of-record do not exist in this repo;
+    artifacts are keyed by config, not date.
+    """
+    return time.perf_counter()
 
 
 def median_time_us(fn, *args, reps: int = 10, warmup: int = 2) -> float:
     """Compiled-execution microseconds: jit once, ``warmup`` discarded
     steady-state calls, then the median of ``reps`` timed calls."""
+    import jax
     jfn = jax.jit(fn)
     jax.block_until_ready(jfn(*args))          # compile
     for _ in range(warmup):
         jax.block_until_ready(jfn(*args))
     samples = []
     for _ in range(reps):
-        t0 = time.perf_counter()
+        t0 = now()
         jax.block_until_ready(jfn(*args))
-        samples.append((time.perf_counter() - t0) * 1e6)
+        samples.append((now() - t0) * 1e6)
     return statistics.median(samples)

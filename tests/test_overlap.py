@@ -20,6 +20,7 @@ import pathlib
 
 import pytest
 
+from repro.analysis.bench import validate_section
 from repro.sim import araxl_params, ara2_params, build_trace, simulate
 from repro.testing.subproc import run_check
 
@@ -124,11 +125,10 @@ def test_exposed_level_seconds_properties():
 # ---------------------------------------------------------------------------
 
 def test_bench_fig6_overlap_recorded_and_improves():
+    """Schema (key sets, overlap >= baseline, exposure monotone) lives in
+    the shared validator; this test keeps only the numeric pins."""
     ov = _bench()["fig6_overlap_64"]
-    assert set(ov) == set(KERNELS)
-    for k, row in ov.items():
-        assert row["overlap"] >= row["baseline"], k
-        assert row["exposed_cycles_overlap"] <= row["exposed_cycles"], k
+    assert validate_section("fig6_overlap_64", ov) == []
     assert ov["softmax"]["overlap"] > ov["softmax"]["baseline"]
     # the recorded ablation is reproducible from the engine
     s1, _ = _scales("softmax", overlap=True)
@@ -136,49 +136,25 @@ def test_bench_fig6_overlap_recorded_and_improves():
 
 
 def test_bench_ring_attention_wallclock_recorded():
-    ra = _bench()["ring_attention_8dev"]
-    assert {"flat", "hier2x2x2"} <= set(ra)
-    for case, row in ra.items():
-        assert set(row) == {"seq", "db"}, case
-        for sched, us in row.items():
-            assert us > 0, (case, sched)
+    assert validate_section("ring_attention_8dev",
+                            _bench()["ring_attention_8dev"]) == []
 
 
 def test_bench_coll_schema():
     """The re-baselined XLA-native vs shard_map-ring comparison: pinned
-    schema so the ROADMAP re-baseline item has a stable record to diff."""
-    coll = _bench()["coll"]
-    assert {"C4L2", "C2L4"} <= set(coll)
-    for tag, ops in coll.items():
-        assert {"reduce", "allgather", "reduce_scatter",
-                "glsu_load"} <= set(ops), tag
-        assert {"flat", "two-level", "xla"} <= set(ops["reduce"]), tag
-        # the double-buffered rings are part of the record
-        for op in ("allgather", "reduce_scatter"):
-            assert {"flat", "two-level", "xla", "flat-db",
-                    "two-level-db"} <= set(ops[op]), (tag, op)
-        for op, variants in ops.items():
-            for variant, us in variants.items():
-                assert us > 0, (tag, op, variant)
+    schema (shared validator) so the ROADMAP re-baseline item has a stable
+    record to diff."""
+    assert validate_section("coll", _bench()["coll"]) == []
 
 
 def test_bench_perf_exposed_le_collective_per_level():
     """Acceptance pin: every perf strategy record carries the overlap-aware
-    exposure, with exposed <= collective per level, and the bucketed
-    fsdp_hier_ov strategy is recorded on the multi-pod cell."""
+    exposure with exposed <= collective per level (shared validator), and
+    the bucketed fsdp_hier_ov strategy is recorded on the multi-pod cell."""
     perf = _bench()["perf"]
+    assert validate_section("perf", perf) == []
     cell = perf["llama3-8b__train_4k__pod2x16x16"]
     assert "fsdp_hier_ov" in cell
-    for strat, entry in cell.items():
-        assert "exposed_collective_s_by_level" in entry, strat
-        by = entry["collective_s_by_level"]
-        exp = entry["exposed_collective_s_by_level"]
-        assert set(exp) == set(by), strat
-        for lab in by:
-            assert 0.0 <= exp[lab] <= by[lab] + 1e-12, (strat, lab)
-        assert entry["exposed_collective_s"] == \
-            pytest.approx(sum(exp.values()))
-        assert entry["exposed_collective_s"] <= entry["collective_s"] + 1e-12
     # the bucketed sync must not change what the wires carry vs fsdp_hier
     hier, ov = cell["fsdp_hier"], cell["fsdp_hier_ov"]
     assert ov["collective_s_by_level"]["pod"] == \

@@ -206,10 +206,13 @@ def test_bench_perf_pod_ring_ablation():
     on the 2x16x16 multi-pod cell) must keep the PR's headline property:
     hierarchical gradient sync prices strictly less pod-ring traffic than
     joint-axis fsdp_pure."""
+    from repro.analysis.bench import validate_section
     bench = json.loads(
         (pathlib.Path(__file__).parents[1] / "BENCH_sim.json").read_text())
+    assert validate_section("perf", bench["perf"]) == []
     cell = bench["perf"]["llama3-8b__train_4k__pod2x16x16"]
     for strat in ("baseline", "fsdp_pure", "fsdp_hier"):
+        # this multi-pod cell prices exactly the three-level wire classes
         assert set(cell[strat]["collective_s_by_level"]) == \
             {"pod", "inter", "intra"}, strat
     hier, pure = cell["fsdp_hier"], cell["fsdp_pure"]

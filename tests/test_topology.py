@@ -229,8 +229,11 @@ def test_params_compose_three_level_topology():
 def test_two_level_calibration_matches_bench_sim_json():
     """The frozen BENCH_sim.json entries are the PR 2 operating points; the
     enum -> levels refactor must reproduce them bit-for-bit."""
+    from repro.analysis.bench import validate_section
     bench = json.loads((ROOT / "BENCH_sim.json").read_text())
     cal = bench["red_tree_lat_64"]
+    assert validate_section("red_tree_lat_64", cal) == []
+    assert validate_section("fig6_grid_64", bench["fig6_grid_64"]) == []
     p = araxl_params(64)
     assert p.red_tree_lat() == cal["two-level"] == 106.0
     assert p.with_hierarchy("flat").red_tree_lat() == cal["flat"] == 286.0
