@@ -33,6 +33,11 @@ Sections:
   ring_attn  measured sequential vs double-buffered ring attention
          (8 fake devices, flat + 2x2x2 odometer; BENCH_sim.json
          `ring_attention_8dev`)
+  kernels  model-guided autotune calibration table: per problem signature,
+         every legal block-shape candidate measured (interpret kernels) with
+         the sim-model rank recorded next to the measured median+IQR —
+         merged into BENCH_kernels.json (the sim-vs-kernels agreement
+         artifact) and into the persistent results/autotune/ winner cache
   roof   roofline summary per dry-run cell (requires results/dryrun/*.json)
   perf   launch-strategy comparison (baseline / fsdp_pure / fsdp_hier /
          fsdp_hier_ov): merges the per-level collective pricing and the
@@ -60,6 +65,10 @@ KERNELS = ["fmatmul", "fconv2d", "jacobi2d", "fdotproduct", "exp", "softmax"]
 
 #: machine-readable results of the sim sections, merged into BENCH_sim.json
 BENCH: dict = {}
+
+#: the autotuner's model-vs-measured rank table, merged into
+#: BENCH_kernels.json (schema pinned by repro.analysis.bench)
+BENCH_KERNELS: dict = {}
 
 
 def _t(fn, *args, reps=3, **kw):
@@ -263,6 +272,31 @@ def bench_kernels():
     print(f"kern/flash_attn(interpret),{us_p:.0f},ref={us_r:.0f}us")
 
 
+def bench_autotune():
+    """The kernel autotuner's calibration table: for every case in
+    ``repro.kernels.autotune.CASES``, measure *all* legal candidates
+    (interpret-mode kernels off-TPU) so the model's predicted rank can be
+    scored against the measured order, and persist the winners into the
+    default results/autotune/ cache that `kernels.ops` resolves against."""
+    from repro.kernels import autotune
+    BENCH_KERNELS["schema"] = 1
+    recs = BENCH_KERNELS.setdefault("records", {})
+    with autotune.tuned(top_k=3, reps=5, warmup=1, min_block=64) as ctx:
+        for kernel, shapes in autotune.CASES.items():
+            for shape in shapes:
+                rec = autotune.autotune(kernel, shape, ctx=ctx,
+                                        measure_all=True)
+                sig = autotune.signature(kernel, rec["shape"], rec["dtype"],
+                                         ctx.topology_tag)
+                recs[sig] = rec
+                win = next(c for c in rec["candidates"]
+                           if c.get("measured_rank") == 0)
+                print(f"kernels/{sig},{win['measured_us']:.1f},"
+                      f"winner={rec['winner']} "
+                      f"model_rank={rec['model_rank_of_winner']} "
+                      f"agree@{rec['top_k']}={rec['agreement_at_k']}")
+
+
 def bench_ring():
     from repro.testing.subproc import run_check
     t0 = now()
@@ -388,9 +422,9 @@ def bench_perf():
 SECTIONS = {
     "fig6": bench_fig6, "fig7": bench_fig7, "tab1": bench_tab1,
     "tab2": bench_tab2, "tab3": bench_tab3, "kern": bench_kernels,
-    "ring": bench_ring, "coll": bench_collectives,
-    "ring_attn": bench_ring_attn, "roof": bench_roofline,
-    "perf": bench_perf,
+    "kernels": bench_autotune, "ring": bench_ring,
+    "coll": bench_collectives, "ring_attn": bench_ring_attn,
+    "roof": bench_roofline, "perf": bench_perf,
 }
 
 #: sections whose derived numbers land in BENCH_sim.json
@@ -448,6 +482,18 @@ def main(argv=None) -> None:
         _deep_merge(merged, BENCH)
         path.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
         print(f"# wrote {path}", file=sys.stderr)
+
+    if not args.no_json and "kernels" in which and BENCH_KERNELS:
+        kpath = ROOT / "BENCH_kernels.json"
+        merged = {}
+        if kpath.exists():
+            try:
+                merged = json.loads(kpath.read_text())
+            except (json.JSONDecodeError, OSError):
+                merged = {}
+        _deep_merge(merged, BENCH_KERNELS)
+        kpath.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
+        print(f"# wrote {kpath}", file=sys.stderr)
 
 
 if __name__ == '__main__':

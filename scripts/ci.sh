@@ -37,7 +37,8 @@ echo "sim benchmark smoke OK (fig7 tab2)"
 # (smoke) arch, 2x2x2 three-level topology.  Exits non-zero on any
 # strategy failure.
 PERF_OUT="$(mktemp -d)"
-trap 'rm -rf "$PERF_OUT"' EXIT
+AT_CACHE="$(mktemp -d)"
+trap 'rm -rf "$PERF_OUT" "$AT_CACHE"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.perf \
     --smoke --arch llama3-8b --shape train_4k --topology 2x2x2 \
     --strategy baseline --strategy fsdp_hier_ov --out "$PERF_OUT" > /dev/null
@@ -48,3 +49,12 @@ echo "launch perf smoke OK (baseline fsdp_hier_ov @ 2x2x2)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.testing.check_overlap attn > /dev/null
 echo "overlap smoke OK (double-buffered ring attention @ 2x2x2)"
+
+# Autotune smoke: the enumerate → model-rank → measure-shortlist → cache
+# loop must run end-to-end for every kernel (tiny shapes, interpret-mode
+# Pallas, top-2 shortlist) against a throwaway cache so the committed
+# results/autotune table is never touched by CI.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -c \
+    'import sys; from repro.kernels.autotune import main; sys.exit(main(sys.argv[1:]))' \
+    --smoke --top-k 2 --reps 3 --cache "$AT_CACHE/cache.json" > /dev/null
+echo "autotune smoke OK (all kernels, top-2 shortlist, throwaway cache)"

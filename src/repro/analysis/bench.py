@@ -278,6 +278,120 @@ VALIDATORS = {
 
 
 # ---------------------------------------------------------------------------
+# BENCH_kernels.json — the autotuner's model-vs-measured rank table
+# ---------------------------------------------------------------------------
+
+KERNELS_SCHEMA = 1
+TUNED_KERNELS = ("matmul", "flash_attention", "rmsnorm", "reduction",
+                 "stencil")
+KERNELS_RECORD_KEYS = ("kernel", "shape", "dtype", "topology", "top_k",
+                       "candidates", "winner", "model_rank_of_winner",
+                       "agreement_at_k")
+#: the acceptance floor: the calibration table must cover at least this
+#: many kernel families at this many problem shapes each
+KERNELS_MIN_KERNELS = 3
+KERNELS_MIN_SHAPES = 2
+
+
+def _v_kernels_record(sig: str, rec, problems: list) -> None:
+    where = f"records[{sig}]"
+    if not _require(rec, KERNELS_RECORD_KEYS, where, problems, exact=True):
+        return
+    if rec["kernel"] not in TUNED_KERNELS:
+        problems.append(f"{where}: unknown kernel {rec['kernel']!r}")
+    parts = sig.split("|")
+    if len(parts) != 4 or parts[0] != rec["kernel"]:
+        problems.append(f"{where}: signature does not match kernel field")
+    shape = rec["shape"]
+    if not (isinstance(shape, list) and shape
+            and all(isinstance(s, int) and s > 0 for s in shape)):
+        problems.append(f"{where}.shape: expected positive int list")
+    elif len(parts) == 4 and parts[1] != "x".join(str(s) for s in shape):
+        problems.append(f"{where}: signature shape != shape field")
+    if not (isinstance(rec["top_k"], int) and rec["top_k"] > 0):
+        problems.append(f"{where}.top_k: expected positive int")
+    cands = rec["candidates"]
+    if not (isinstance(cands, list) and cands):
+        problems.append(f"{where}.candidates: expected non-empty list")
+        return
+    measured = []
+    for i, c in enumerate(cands):
+        cw = f"{where}.candidates[{i}]"
+        if not _require(c, ("config", "model_us", "model_rank"), cw,
+                        problems):
+            return
+        cfg = c["config"]
+        if not (isinstance(cfg, dict) and cfg
+                and all(isinstance(v, int) and v > 0 for v in cfg.values())):
+            problems.append(f"{cw}.config: expected positive int mapping")
+        if not _pos(c["model_us"]):
+            problems.append(f"{cw}.model_us: expected positive number")
+        if "measured_us" in c:
+            if not _pos(c["measured_us"]):
+                problems.append(f"{cw}.measured_us: expected positive")
+            if not (_is_num(c.get("iqr_us")) and c["iqr_us"] >= 0):
+                problems.append(f"{cw}.iqr_us: expected non-negative")
+            if not (isinstance(c.get("reps"), int) and c["reps"] >= 1):
+                problems.append(f"{cw}.reps: expected int >= 1")
+            measured.append(c)
+    if sorted(c["model_rank"] for c in cands) != list(range(len(cands))):
+        problems.append(f"{where}: model_rank is not a 0..n-1 permutation")
+    if not measured:
+        problems.append(f"{where}: no measured candidates")
+        return
+    if sorted(c.get("measured_rank", -1) for c in measured) != \
+            list(range(len(measured))):
+        problems.append(f"{where}: measured_rank is not a permutation "
+                        f"over the measured shortlist")
+        return
+    win = min(measured, key=lambda c: c["measured_rank"])
+    if rec["winner"] != win["config"]:
+        problems.append(f"{where}: winner != measured_rank-0 config")
+    if rec["model_rank_of_winner"] != win["model_rank"]:
+        problems.append(f"{where}: model_rank_of_winner inconsistent")
+    if rec["agreement_at_k"] != (win["model_rank"] < rec["top_k"]):
+        problems.append(f"{where}: agreement_at_k inconsistent with "
+                        f"model_rank_of_winner/top_k")
+
+
+def validate_kernels_bench(doc) -> list[str]:
+    """Schema problems for BENCH_kernels.json (empty when clean)."""
+    problems: list[str] = []
+    if not _require(doc, ("schema", "records"), "BENCH_kernels", problems,
+                    exact=True):
+        return problems
+    if doc["schema"] != KERNELS_SCHEMA:
+        problems.append(f"BENCH_kernels: schema {doc['schema']!r} != "
+                        f"{KERNELS_SCHEMA}")
+    records = doc["records"]
+    if not isinstance(records, dict) or not records:
+        problems.append("BENCH_kernels.records: expected non-empty mapping")
+        return problems
+    shapes: dict[str, set] = {}
+    for sig, rec in sorted(records.items()):
+        _v_kernels_record(sig, rec, problems)
+        if isinstance(rec, dict) and isinstance(rec.get("shape"), list):
+            shapes.setdefault(str(rec.get("kernel")), set()).add(
+                tuple(rec["shape"]))
+    covered = sum(1 for s in shapes.values()
+                  if len(s) >= KERNELS_MIN_SHAPES)
+    if covered < KERNELS_MIN_KERNELS:
+        problems.append(
+            f"BENCH_kernels: coverage {covered} kernel(s) with >= "
+            f"{KERNELS_MIN_SHAPES} shapes — need {KERNELS_MIN_KERNELS}")
+    return problems
+
+
+def load_kernels_bench(root: pathlib.Path | None = None) -> dict | None:
+    """The recorded autotune table, or None when not yet recorded."""
+    root = pathlib.Path(root) if root is not None else repo_root()
+    path = root / "BENCH_kernels.json"
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+# ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
 
@@ -309,13 +423,19 @@ def main(argv: list[str] | None = None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     root = pathlib.Path(argv[0]) if argv else repo_root()
     bench = load_bench(root)
-    problems = validate_bench(bench)
+    problems = [f"BENCH_sim.json: {p}" for p in validate_bench(bench)]
+    kernels = load_kernels_bench(root)
+    if kernels is not None:
+        problems += [f"BENCH_kernels.json: {p}"
+                     for p in validate_kernels_bench(kernels)]
     for p in problems:
-        print(f"BENCH_sim.json: {p}")
+        print(p)
     if problems:
         print(f"repro.analysis.bench: {len(problems)} problem(s)")
         return 1
-    print(f"repro.analysis.bench: {len(bench)} sections OK")
+    n_rec = len(kernels["records"]) if kernels else 0
+    print(f"repro.analysis.bench: {len(bench)} sections OK"
+          + (f", {n_rec} autotune records OK" if kernels else ""))
     return 0
 
 

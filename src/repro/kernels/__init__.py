@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the paper's Table-I set + LM hot-spots.
 
 Layout per kernel: <name>.py holds the pl.pallas_call + BlockSpec tiling,
-ops.py the jit'd public wrapper (auto TPU/interpret/reference dispatch),
-ref.py the pure-jnp oracle used by the allclose test sweeps.
+ops.py the jit'd public wrapper (auto TPU/interpret/reference dispatch,
+block shapes resolved against the autotune winner table), ref.py the
+pure-jnp oracle used by the allclose test sweeps, autotune.py the
+model-guided block-shape tuner, vrf.py the shared register-file budget.
 """
-from . import ops, ref
+from . import autotune, ops, ref, vrf
 
-__all__ = ["ops", "ref"]
+__all__ = ["autotune", "ops", "ref", "vrf"]

@@ -20,7 +20,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .vrf import VREG_GROUP_BYTES, VRF_BYTES, clamp_div
+
 NEG_INF = -1e30
+
+
+def clamp_blocks(S: int, Sk: int, D: int, bq: int, bk: int,
+                 itemsize: int) -> tuple[int, int]:
+    """rmsnorm-style clamp for the attention block args: halve ``bq``/``bk``
+    until they divide S/Sk and the S3 buffers — q/o blocks plus the f32
+    accumulator on the q side, k/v blocks on the kv side — fit one LMUL=8
+    register group with the resident set inside the VRF."""
+    bq, bk = clamp_div(bq, S), clamp_div(bk, Sk)
+    while bq > 1 and max(bq * D * itemsize, bq * D * 4) > VREG_GROUP_BYTES:
+        bq //= 2
+    while bk > 1 and bk * D * itemsize > VREG_GROUP_BYTES:
+        bk //= 2
+    def resident(bq, bk):
+        return (2 * bq * D * itemsize + 2 * bk * D * itemsize
+                + bq * D * 4 + 2 * bq * 4)
+    while resident(bq, bk) > VRF_BYTES and (bq > 1 or bk > 1):
+        if bq >= bk and bq > 1:
+            bq //= 2
+        else:
+            bk //= 2
+    return bq, bk
 
 
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -72,10 +96,14 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int | None = None,
                     bq: int = 128, bk: int = 128,
                     interpret: bool = False) -> jax.Array:
-    """q (B,Hq,S,D), k/v (B,Hkv,S,D) -> (B,Hq,S,D). S % bq == S % bk == 0."""
+    """q (B,Hq,S,D), k/v (B,Hkv,S,D) -> (B,Hq,S,D).
+
+    ``bq``/``bk`` are ceilings, halved until they divide S/Sk and fit the
+    register-group budget (see :func:`clamp_blocks`).
+    """
     B, Hq, S, D = q.shape
     _, Hkv, Sk, _ = k.shape
-    assert S % bq == 0 and Sk % bk == 0
+    bq, bk = clamp_blocks(S, Sk, D, bq, bk, q.dtype.itemsize)
     group = Hq // Hkv
     scale = 1.0 / math.sqrt(D)
     qf = q.reshape(B * Hq, S, D)

@@ -20,6 +20,37 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .vrf import VREG_GROUP_BYTES, VRF_BYTES, clamp_div
+
+
+def clamp_blocks(M: int, N: int, K: int, bm: int, bn: int, bk: int,
+                 itemsize: int) -> tuple[int, int, int]:
+    """rmsnorm-style block clamp: halve until the grid divides and every
+    buffer fits one LMUL=8 register group (resident set inside the VRF).
+
+    Buffers mirror analysis rule S3's view of the kernel: ``(bm, bk)`` /
+    ``(bk, bn)`` operand blocks in the input dtype, a ``(bm, bn)`` output
+    block, and the f32 accumulator scratch.  Halving a divisor keeps it a
+    divisor, so the budget loop never re-breaks divisibility.
+    """
+    bm, bn, bk = clamp_div(bm, M), clamp_div(bn, N), clamp_div(bk, K)
+    while True:
+        a_b, b_b = bm * bk * itemsize, bk * bn * itemsize
+        o_b, acc = bm * bn * itemsize, bm * bn * 4
+        group_ok = max(a_b, b_b, o_b, acc) <= VREG_GROUP_BYTES
+        if group_ok and a_b + b_b + o_b + acc <= VRF_BYTES:
+            return bm, bn, bk
+        if (a_b > VREG_GROUP_BYTES or b_b > VREG_GROUP_BYTES) and bk > 1:
+            bk //= 2
+        elif bm >= bn and bm > 1:
+            bm //= 2
+        elif bn > 1:
+            bn //= 2
+        elif bk > 1:
+            bk //= 2
+        else:
+            return bm, bn, bk
+
 
 def _mm_kernel(a_ref, b_ref, o_ref, acc_ref):
     k = pl.program_id(2)
@@ -39,11 +70,17 @@ def _mm_kernel(a_ref, b_ref, o_ref, acc_ref):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
            bk: int = 128, interpret: bool = False) -> jax.Array:
-    """a @ b with f32 accumulation. Shapes must tile by (bm, bn, bk)."""
+    """a @ b with f32 accumulation.
+
+    ``(bm, bn, bk)`` are ceilings: they are halved until the grid divides
+    and the blocks fit the register-group / VRF budgets (see
+    :func:`clamp_blocks`), so arbitrary model shapes and autotuner
+    candidates are always legal.
+    """
     M, K = a.shape
     K2, N = b.shape
-    assert K == K2 and M % bm == 0 and N % bn == 0 and K % bk == 0, \
-        (a.shape, b.shape, bm, bn, bk)
+    assert K == K2, (a.shape, b.shape)
+    bm, bn, bk = clamp_blocks(M, N, K, bm, bn, bk, a.dtype.itemsize)
     return pl.pallas_call(
         _mm_kernel,
         grid=(M // bm, N // bn, K // bk),

@@ -2,7 +2,11 @@
 elsewhere (the CPU dry-run lowers the jnp path; interpret=True is for tests).
 
 Wrappers also normalise shapes (padding to block multiples) so callers never
-see tiling constraints.
+see tiling constraints, and resolve block shapes against the ambient
+autotune winner table (`kernels.autotune`): an explicit caller arg wins,
+then the tuned config for the problem signature, then the static default —
+so `launch.train` / `launch.perf` / `serve` pick up tuned blocks with zero
+call-site churn.
 """
 from __future__ import annotations
 
@@ -11,6 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import autotune as _at
 from . import flash_attention as _fa
 from . import matmul as _mm
 from . import reduction as _red
@@ -21,6 +26,17 @@ from . import stencil as _st
 
 def _on_tpu() -> bool:
     return jax.devices()[0].platform == "tpu"
+
+
+def _resolve(kernel, shape, dtype, **given):
+    """Block-arg resolution: explicit args win, then the ambient autotune
+    table, then `autotune.DEFAULTS`."""
+    defaults = _at.DEFAULTS[kernel]
+    if any(v is None for v in given.values()):
+        cfg = _at.tuned_config(kernel, shape, str(dtype)) or {}
+        given = {k: (v if v is not None else cfg.get(k, defaults[k]))
+                 for k, v in given.items()}
+    return {k: int(v) for k, v in given.items()}
 
 
 def _mode(use_pallas):
@@ -42,10 +58,13 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, pad), r
 
 
-def matmul(a, b, *, use_pallas=None, bm=128, bn=128, bk=128):
+def matmul(a, b, *, use_pallas=None, bm=None, bn=None, bk=None):
     m = _mode(use_pallas)
     if m == "ref":
         return ref.matmul(a, b)
+    cfg = _resolve("matmul", (a.shape[0], a.shape[1], b.shape[1]), a.dtype,
+                   bm=bm, bn=bn, bk=bk)
+    bm, bn, bk = cfg["bm"], cfg["bn"], cfg["bk"]
     a, pm = _pad_to(a, bm, 0)
     a, pk = _pad_to(a, bk, 1)
     b, _ = _pad_to(b, bk, 0)
@@ -55,13 +74,15 @@ def matmul(a, b, *, use_pallas=None, bm=128, bn=128, bk=128):
         if (pm or pn) else out
 
 
-def jacobi2d(x, *, use_pallas=None, bh=8, bw=256):
+def jacobi2d(x, *, use_pallas=None, bh=None, bw=None):
     """x (H, W) unpadded; zero boundary (one sweep over the interior grid)."""
     xp = jnp.pad(x, 1)
     m = _mode(use_pallas)
     if m == "ref":
         return ref.jacobi2d(xp)
     H, W = x.shape
+    cfg = _resolve("stencil", (H, W), x.dtype, bh=bh, bw=bw)
+    bh, bw = cfg["bh"], cfg["bw"]
     bh = min(bh, H) if H % bh else bh
     while H % bh:
         bh -= 1
@@ -72,13 +93,15 @@ def jacobi2d(x, *, use_pallas=None, bh=8, bw=256):
     return _st.jacobi2d(xp, bh=bh, bw=bw_, interpret=(m == "interpret"))
 
 
-def fconv2d(x, filt, *, use_pallas=None, bh=8, bw=256):
+def fconv2d(x, filt, *, use_pallas=None, bh=None, bw=None):
     """valid conv: x (H, W), filt (fr, fc) -> (H-fr+1, W-fc+1)."""
     fr, fc = filt.shape
     m = _mode(use_pallas)
     if m == "ref":
         return ref.fconv2d(x, filt)
     H, W = x.shape[0] - fr + 1, x.shape[1] - fc + 1
+    cfg = _resolve("stencil", (H, W), x.dtype, bh=bh, bw=bw)
+    bh, bw = cfg["bh"], cfg["bw"]
     while H % bh:
         bh -= 1
     bw_ = bw
@@ -88,10 +111,12 @@ def fconv2d(x, filt, *, use_pallas=None, bh=8, bw=256):
                        interpret=(m == "interpret"))
 
 
-def dotprod(a, b, *, use_pallas=None, block=2048):
+def dotprod(a, b, *, use_pallas=None, block=None):
     m = _mode(use_pallas)
     if m == "ref":
         return ref.dotprod(a, b)
+    block = _resolve("reduction", (a.shape[0],), a.dtype,
+                     block=block)["block"]
     quantum = 8 * block
     a, _ = _pad_to(a, quantum, 0)
     b, _ = _pad_to(b, quantum, 0)
@@ -135,11 +160,15 @@ def softmax_rows(x, *, use_pallas=None, bm=8):
 
 
 def attention(q, k, v, *, causal=True, window=None, use_pallas=None,
-              bq=128, bk=128):
+              bq=None, bk=None):
     m = _mode(use_pallas)
     if m == "ref":
         return ref.attention(q, k, v, causal=causal, window=window)
-    S, Sk = q.shape[2], k.shape[2]
+    B, Hq, S, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    cfg = _resolve("flash_attention", (B, Hq, Hkv, S, Sk, D), q.dtype,
+                   bq=bq, bk=bk)
+    bq, bk = cfg["bq"], cfg["bk"]
     bq = min(bq, S)
     while S % bq:
         bq //= 2
@@ -151,14 +180,41 @@ def attention(q, k, v, *, causal=True, window=None, use_pallas=None,
                                interpret=(m == "interpret"))
 
 
-def rmsnorm(x, gamma, *, eps=1e-6, use_pallas=None, bm=8):
+def rmsnorm(x, gamma, *, eps=1e-6, use_pallas=None, bm=None):
     m = _mode(use_pallas)
     if m == "ref":
         return ref.rmsnorm(x, gamma, eps)
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     R = x2.shape[0]
+    bm = _resolve("rmsnorm", (R, shape[-1]), x.dtype, bm=bm)["bm"]
     while R % bm:
         bm -= 1
     out = _rms.rmsnorm(x2, gamma, bm=bm, eps=eps, interpret=(m == "interpret"))
     return out.reshape(shape)
+
+
+def dense(x, w, *, use_pallas=None):
+    """The models' projection seam: ``x @ w`` contracting the last dim.
+
+    Ref mode is *literally* ``x @ w`` (bit-identical to the historical
+    inline call sites); Pallas mode flattens the leading dims and runs the
+    tuned-block matmul."""
+    if _mode(use_pallas) == "ref":
+        return x @ w
+    lead = x.shape[:-1]
+    out = matmul(x.reshape(-1, x.shape[-1]), w, use_pallas=use_pallas)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def attention_q_chunk(S, T, H, Dh, dtype, *, default=512):
+    """The q-block for the chunked-attention seam in `models.layers`: the
+    tuned ``flash_attention`` bq for this problem signature when recorded,
+    else ``default`` — lowered to a divisor of S (the chunked math is
+    per-q-row independent, so any chunk size is bit-identical)."""
+    cfg = _at.tuned_config("flash_attention", (1, H, H, S, T, Dh),
+                           str(dtype)) or {}
+    cq = max(1, min(int(cfg.get("bq", default)), S))
+    while S % cq:
+        cq -= 1
+    return cq

@@ -11,9 +11,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-#: one LMUL=8 register group at the RVV-max 64 Kibit VLEN (AraXLParams):
-#: a row block must stay inside it, or the lanes spill mid-sweep
-_VREG_GROUP_BYTES = 65536
+# a row block must stay inside one LMUL=8 register group at the RVV-max
+# 64 Kibit VLEN (AraXLParams), or the lanes spill mid-sweep
+from .vrf import VREG_GROUP_BYTES as _VREG_GROUP_BYTES
 
 
 def _rms_kernel(x_ref, g_ref, o_ref, *, eps: float):
@@ -26,16 +26,20 @@ def _rms_kernel(x_ref, g_ref, o_ref, *, eps: float):
 @functools.partial(jax.jit, static_argnames=("bm", "eps", "interpret"))
 def rmsnorm(x: jax.Array, gamma: jax.Array, *, bm: int = 8,
             eps: float = 1e-6, interpret: bool = False) -> jax.Array:
-    """x (R, D), gamma (D,) -> (R, D); R % bm == 0.
+    """x (R, D), gamma (D,) -> (R, D).
 
     ``bm`` is a *ceiling*: it is halved until an (bm, D) f32 block fits one
     LMUL=8 register group, so wide-model rows (D=4096 busts 8 rows x 16 KiB)
-    still stream without spilling.  Halving preserves R % bm == 0.
+    still stream without spilling, then lowered to a divisor of R so any
+    row count is legal.
     """
     R, D = x.shape
+    assert gamma.shape == (D,)
+    bm = max(1, min(bm, R))
     while bm > 1 and bm * D * 4 > _VREG_GROUP_BYTES:
         bm //= 2
-    assert R % bm == 0 and gamma.shape == (D,)
+    while R % bm:
+        bm -= 1
     kernel = functools.partial(_rms_kernel, eps=eps)
     return pl.pallas_call(
         kernel,

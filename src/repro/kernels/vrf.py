@@ -1,0 +1,38 @@
+"""The AraXL vector-register-file capacity model, shared by every kernel.
+
+One vreg holds VLEN = 64 Kibit = 8 KiB; an LMUL=8 register group is the
+largest single operand the ISA can name (64 KiB), and the whole 32-vreg
+VRF bounds the resident working set (256 KiB).  Analysis rule S3 enforces
+exactly these two budgets on every traced ``pallas_call``; the kernels'
+block clamps and the autotuner's candidate filter mirror them here so
+there is a single source of truth.
+"""
+from __future__ import annotations
+
+VLEN_BITS = 65536
+VREG_BYTES = VLEN_BITS // 8          # 8 KiB: one vector register
+LMUL_MAX = 8
+VREG_GROUP_BYTES = LMUL_MAX * VREG_BYTES   # 64 KiB: one LMUL=8 group
+VRF_VREGS = 32
+VRF_BYTES = VRF_VREGS * VREG_BYTES         # 256 KiB: whole register file
+
+
+def clamp_div(b: int, dim: int) -> int:
+    """Halve ``b`` until it divides ``dim`` (terminates at 1).
+
+    Halving preserves divisibility for even divisors, so later budget
+    clamps that keep halving never re-break the grid.
+    """
+    b = max(1, min(b, dim))
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+def clamp_budget(b: int, bytes_per_unit: int,
+                 budget: int = VREG_GROUP_BYTES) -> int:
+    """Halve ``b`` until ``b * bytes_per_unit`` fits ``budget``."""
+    b = max(b, 1)
+    while b > 1 and b * bytes_per_unit > budget:
+        b //= 2
+    return b

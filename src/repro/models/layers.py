@@ -21,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import substrate
 from repro.configs.base import ATTN, MAMBA, MLP, MOE, XATTN, ModelConfig
+from repro.kernels import ops as kops
 from repro.parallel.sharding import PV, ShardingRules, constraint
 
 
@@ -29,9 +30,9 @@ from repro.parallel.sharding import PV, ShardingRules, constraint
 # ---------------------------------------------------------------------------
 
 def rmsnorm(x: jax.Array, g: jax.Array, eps: float) -> jax.Array:
-    xf = x.astype(jnp.float32)
-    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    return (xf * jax.lax.rsqrt(ms + eps) * g.astype(jnp.float32)).astype(x.dtype)
+    # routed through kernels.ops so tuned block configs apply on TPU; the
+    # off-TPU ref path is the same f32 rsqrt expression, bit for bit
+    return kops.rmsnorm(x, g, eps=eps)
 
 
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
@@ -74,9 +75,9 @@ def _qkv(p, x, cfg: ModelConfig, rules, positions, rotate: bool):
     # constrain the flat projections (always divisible by |model|), then
     # reshape to heads — kv-head counts below |model| (glm4: kv=2) stay
     # shardable on the fused dim.
-    qf = constraint(xn @ p["wq"], rules, "batch", None, "model")
-    kf = constraint(xn @ p["wk"], rules, "batch", None, "model")
-    vf = constraint(xn @ p["wv"], rules, "batch", None, "model")
+    qf = constraint(kops.dense(xn, p["wq"]), rules, "batch", None, "model")
+    kf = constraint(kops.dense(xn, p["wk"]), rules, "batch", None, "model")
+    vf = constraint(kops.dense(xn, p["wv"]), rules, "batch", None, "model")
     q = qf.reshape(B, S, cfg.n_heads, hd)
     k = kf.reshape(B, S, cfg.n_kv_heads, hd)
     v = vf.reshape(B, S, cfg.n_kv_heads, hd)
@@ -97,12 +98,15 @@ def _expand_kv(k, H: int, rules: ShardingRules):
 
 def _sdpa_chunked(q, k, v, cfg: ModelConfig, rules: ShardingRules, *,
                   causal: bool, q_offset: int = 0,
-                  q_chunk: int = 512) -> jax.Array:
+                  q_chunk: int | None = None) -> jax.Array:
     """Exact chunked attention: scan over q blocks against full K/V.
 
     f32 softmax; causal + sliding-window masks; the chunk body is
     checkpointed so backward recomputes score blocks instead of saving
     every softmax matrix (flash-style memory behaviour in pure XLA).
+    The q-block size comes from the autotune table via
+    `kernels.ops.attention_q_chunk` (chunking is per-q-row independent, so
+    any block size is bit-identical).
     q (B,S,H,Dh), k/v (B,T,Hkv,Dh) -> (B,S,H,Dh)."""
     B, S, H, Dh = q.shape
     T = k.shape[1]
@@ -110,9 +114,12 @@ def _sdpa_chunked(q, k, v, cfg: ModelConfig, rules: ShardingRules, *,
     q = constraint(q, rules, "batch", None, "model", None)
     k = _expand_kv(k, H, rules)
     v = _expand_kv(v, H, rules)
-    cq = min(q_chunk, S)
-    while S % cq:
-        cq -= 1
+    if q_chunk is not None:                   # explicit caller choice wins
+        cq = min(q_chunk, S)
+        while S % cq:
+            cq -= 1
+    else:
+        cq = kops.attention_q_chunk(S, T, H, Dh, q.dtype)
     n_chunks = S // cq
     k_pos = jnp.arange(T)
 
@@ -144,7 +151,7 @@ def attn_layer(p, x, cfg: ModelConfig, rules: ShardingRules, positions,
     B, S, d = x.shape
     q, k, v = _qkv(p, x, cfg, rules, positions, rotate=True)
     o = _sdpa_chunked(q, k, v, cfg, rules, causal=causal)
-    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    o = kops.dense(o.reshape(B, S, cfg.n_heads * cfg.head_dim), p["wo"])
     o = constraint(o, rules, "batch", None, None)
     return x + o.astype(x.dtype)
 
@@ -246,7 +253,8 @@ def attn_layer_decode(p, x, cache: AttnCache, pos, cfg: ModelConfig,
         s, cvf = _scores_out(qg, ck, cv, jnp.arange(W), pos)
         pr = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhgqt,bthd->bqhgd", pr, cvf)
-    o = o.reshape(B, S1, cfg.n_heads * hd).astype(x.dtype) @ p["wo"]
+    o = kops.dense(o.reshape(B, S1, cfg.n_heads * hd).astype(x.dtype),
+                   p["wo"])
     return x + o.astype(x.dtype), AttnCache(ck, cv)
 
 
@@ -255,7 +263,7 @@ def attn_layer_prefill(p, x, cfg: ModelConfig, rules, positions, cache_len):
     B, S, _ = x.shape
     q, k, v = _qkv(p, x, cfg, rules, positions, rotate=True)
     o = _sdpa_chunked(q, k, v, cfg, rules, causal=True)
-    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    o = kops.dense(o.reshape(B, S, cfg.n_heads * cfg.head_dim), p["wo"])
     W = cache_len
     if W >= S:
         pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
@@ -280,11 +288,11 @@ def xattn_layer(p, x, ctx, cfg: ModelConfig, rules: ShardingRules):
     B, S, d = x.shape
     hd = cfg.head_dim
     xn = rmsnorm(x, p["norm"], cfg.norm_eps)
-    q = (xn @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
-    k = (ctx @ p["wk"]).reshape(B, ctx.shape[1], cfg.n_kv_heads, hd)
-    v = (ctx @ p["wv"]).reshape(B, ctx.shape[1], cfg.n_kv_heads, hd)
+    q = kops.dense(xn, p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = kops.dense(ctx, p["wk"]).reshape(B, ctx.shape[1], cfg.n_kv_heads, hd)
+    v = kops.dense(ctx, p["wv"]).reshape(B, ctx.shape[1], cfg.n_kv_heads, hd)
     o = _sdpa_chunked(q, k, v, cfg, rules, causal=False)
-    o = o.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+    o = kops.dense(o.reshape(B, S, cfg.n_heads * hd), p["wo"])
     return x + o.astype(x.dtype)
 
 
@@ -302,8 +310,8 @@ def xattn_cache_defs(cfg: ModelConfig, batch: int) -> XAttnCache:
 def xattn_prefill_cache(p, ctx, cfg: ModelConfig) -> XAttnCache:
     B, T, _ = ctx.shape
     hd = cfg.head_dim
-    k = (ctx @ p["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
-    v = (ctx @ p["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+    k = kops.dense(ctx, p["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+    v = kops.dense(ctx, p["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
     return XAttnCache(k, v)
 
 
@@ -312,14 +320,15 @@ def xattn_layer_decode(p, x, cache: XAttnCache, cfg: ModelConfig,
     B, S1, d = x.shape
     hd = cfg.head_dim
     xn = rmsnorm(x, p["norm"], cfg.norm_eps)
-    q = (xn @ p["wq"]).reshape(B, S1, cfg.n_heads, hd)
+    q = kops.dense(xn, p["wq"]).reshape(B, S1, cfg.n_heads, hd)
     G = cfg.n_heads // cfg.n_kv_heads
     qg = q.reshape(B, S1, cfg.n_kv_heads, G, hd)
     s = jnp.einsum("bqhgd,bthd->bhgqt", qg.astype(jnp.float32),
                    cache.k.astype(jnp.float32)) / math.sqrt(hd)
     pr = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqt,bthd->bqhgd", pr, cache.v.astype(jnp.float32))
-    o = o.reshape(B, S1, cfg.n_heads * hd).astype(x.dtype) @ p["wo"]
+    o = kops.dense(o.reshape(B, S1, cfg.n_heads * hd).astype(x.dtype),
+                   p["wo"])
     return x + o.astype(x.dtype), cache
 
 
@@ -339,9 +348,9 @@ def mlp_defs(cfg: ModelConfig) -> dict:
 
 def mlp_layer(p, x, cfg: ModelConfig, rules: ShardingRules):
     xn = rmsnorm(x, p["norm"], cfg.norm_eps)
-    h = silu(xn @ p["wg"]) * (xn @ p["wi"])
+    h = silu(kops.dense(xn, p["wg"])) * kops.dense(xn, p["wi"])
     h = constraint(h, rules, "batch", None, "model")
-    o = h @ p["wo"]
+    o = kops.dense(h, p["wo"])
     return x + o.astype(x.dtype)
 
 
@@ -716,7 +725,7 @@ def _ssd_chunked(xh, dtv, Bm, Cm, A, chunk: int, state_in=None):
 def _mamba_project(p, x, cfg: ModelConfig):
     di, N, H = cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
     xn = rmsnorm(x, p["norm"], cfg.norm_eps)
-    proj = xn @ p["in_proj"]                          # (B,S,2di+2N+H)
+    proj = kops.dense(xn, p["in_proj"])               # (B,S,2di+2N+H)
     z, xc, Bm, Cm, dtv = jnp.split(
         proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
     return z, jnp.concatenate([xc, Bm, Cm], -1), dtv
@@ -746,7 +755,7 @@ def mamba_layer(p, x, cfg: ModelConfig, rules: ShardingRules,
     y = y + p["D"][None, None, :, None] * xh          # skip
     y = y.reshape(B, S, di)
     y = rmsnorm(y.astype(x.dtype) * silu(z), p["gnorm"], cfg.norm_eps)
-    out = y @ p["out_proj"]
+    out = kops.dense(y, p["out_proj"])
     res = x + out.astype(x.dtype)
     if return_state:
         new_conv = xbc_p[:, S:S + kc - 1] if kc > 1 else pad
@@ -790,6 +799,6 @@ def mamba_layer_decode(p, x, cache: MambaCache, cfg: ModelConfig,
     y = jnp.einsum("bhpn,bn->bhp", state, Cv) + p["D"][None, :, None] * xh
     y = y.reshape(B, 1, di)
     y = rmsnorm(y.astype(x.dtype) * silu(z), p["gnorm"], cfg.norm_eps)
-    out = y @ p["out_proj"]
+    out = kops.dense(y, p["out_proj"])
     new_conv = window[:, 1:] if kc > 1 else cache.conv
     return x + out.astype(x.dtype), MambaCache(new_conv, state)

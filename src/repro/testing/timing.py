@@ -12,8 +12,23 @@ front must stay importable without pulling in the runtime.
 """
 from __future__ import annotations
 
+import dataclasses
 import statistics
 import time
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """A steady-state timing sample: the median plus its dispersion.
+
+    ``iqr_us`` is the interquartile range of the timed reps — consumers
+    (the kernel autotuner) use it to reject noisy ranks instead of caching
+    a scheduler fluke.  ``reps`` is the number of timed calls behind the
+    statistics (warmup calls excluded).
+    """
+    median_us: float
+    iqr_us: float
+    reps: int
 
 
 def now() -> float:
@@ -27,17 +42,30 @@ def now() -> float:
     return time.perf_counter()
 
 
-def median_time_us(fn, *args, reps: int = 10, warmup: int = 2) -> float:
-    """Compiled-execution microseconds: jit once, ``warmup`` discarded
-    steady-state calls, then the median of ``reps`` timed calls."""
+def measure_us(fn, *args, reps: int = 10, warmup: int = 2) -> Sample:
+    """Compiled-execution microseconds with dispersion: jit once,
+    ``warmup`` discarded steady-state calls, then ``reps`` timed calls
+    summarised as a :class:`Sample` (median + IQR)."""
     import jax
     jfn = jax.jit(fn)
     jax.block_until_ready(jfn(*args))          # compile
     for _ in range(warmup):
         jax.block_until_ready(jfn(*args))
     samples = []
-    for _ in range(reps):
+    for _ in range(max(reps, 1)):
         t0 = now()
         jax.block_until_ready(jfn(*args))
         samples.append((now() - t0) * 1e6)
-    return statistics.median(samples)
+    if len(samples) >= 2:
+        q1, _, q3 = statistics.quantiles(samples, n=4)
+        iqr = q3 - q1
+    else:
+        iqr = 0.0
+    return Sample(median_us=statistics.median(samples), iqr_us=iqr,
+                  reps=len(samples))
+
+
+def median_time_us(fn, *args, reps: int = 10, warmup: int = 2) -> float:
+    """Float-returning façade over :func:`measure_us` (the historical
+    call-site contract: just the median)."""
+    return measure_us(fn, *args, reps=reps, warmup=warmup).median_us

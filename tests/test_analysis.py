@@ -325,6 +325,43 @@ def test_bench_validator_rejects_mutations():
 
 
 # ---------------------------------------------------------------------------
+# BENCH_kernels.json autotune-record schema
+# ---------------------------------------------------------------------------
+
+def test_kernels_bench_validator_accepts_recorded_artifact():
+    from repro.analysis.bench import load_kernels_bench, validate_kernels_bench
+    doc = load_kernels_bench(ROOT)
+    assert doc is not None, "BENCH_kernels.json missing — run " \
+                            "`python -m benchmarks.run kernels`"
+    assert validate_kernels_bench(doc) == []
+
+
+def test_kernels_bench_validator_fires():
+    from repro.analysis.bench import validate_kernels_bench
+    doc = json.loads((ROOT / "BENCH_kernels.json").read_text())
+
+    # wrong schema pin
+    bad = {"schema": 99, "records": doc["records"]}
+    assert any("schema" in p for p in validate_kernels_bench(bad))
+
+    # winner must be the measured_rank-0 candidate's config
+    broken = copy.deepcopy(doc)
+    sig, rec = sorted(broken["records"].items())[0]
+    rec["winner"] = {"bogus": 1}
+    assert any("winner" in p for p in validate_kernels_bench(broken))
+
+    # model ranks must form a permutation of 0..n-1
+    broken = copy.deepcopy(doc)
+    sig, rec = sorted(broken["records"].items())[0]
+    rec["candidates"][0]["model_rank"] = 999
+    assert any("permutation" in p for p in validate_kernels_bench(broken))
+
+    # coverage floor: >=3 kernels x >=2 shapes each
+    lone = {"schema": 1, "records": {sig: copy.deepcopy(doc["records"][sig])}}
+    assert any("coverage" in p for p in validate_kernels_bench(lone))
+
+
+# ---------------------------------------------------------------------------
 # catalogue + repo-wide clean run
 # ---------------------------------------------------------------------------
 

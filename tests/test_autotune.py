@@ -1,0 +1,242 @@
+"""Kernel-autotuner tests: candidate legality under the S3 VRF budget,
+block-clamp behaviour on arbitrary shapes, cache-round-trip determinism,
+the model-vs-measured rank-agreement gate (interpret kernels on the CPU
+emulator), and tuned-config consumption through ops into the model seams.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops, ref
+from repro.kernels import flash_attention as fa_mod
+from repro.kernels import matmul as mm_mod
+from repro.kernels.vrf import VREG_GROUP_BYTES, VRF_BYTES, clamp_div
+
+CASES = [
+    ("matmul", (128, 128, 128)),
+    ("flash_attention", (1, 2, 1, 128, 128, 64)),
+    ("rmsnorm", (64, 2048)),
+    ("reduction", (65536,)),
+    ("stencil", (64, 256)),
+]
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration respects the S3 VRF budget
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel,shape", CASES)
+def test_candidates_respect_vrf_budget(kernel, shape):
+    cands = autotune.enumerate_candidates(kernel, shape)
+    assert cands
+    for cfg in cands:
+        bufs = autotune.candidate_buffers(kernel, shape, "float32", cfg)
+        assert max(b for _, b in bufs) <= VREG_GROUP_BYTES, (cfg, bufs)
+        assert sum(b for _, b in bufs) <= VRF_BYTES, (cfg, bufs)
+        assert autotune.grid_steps(kernel, shape, cfg) >= 1
+
+
+def test_model_top_candidate_passes_s3():
+    """The model's preferred tiling must trace through analysis rule S3
+    clean — the enumerator's budget mirror is checked against the real
+    jaxpr walker, not just its own arithmetic."""
+    from repro.analysis.jaxpr_check import check_pallas_budget
+    from repro.sim import araxl_params
+    p = araxl_params(64)
+    M, K, N = 128, 128, 128
+    cands = autotune.enumerate_candidates("matmul", (M, K, N))
+    cfg = autotune.rank_candidates("matmul", (M, K, N), "float32",
+                                   cands)[0][0]
+    a = jnp.zeros((M, K), jnp.float32)
+    b = jnp.zeros((K, N), jnp.float32)
+    closed = jax.make_jaxpr(
+        lambda a, b: mm_mod.matmul(a, b, interpret=True, **cfg))(a, b)
+    assert check_pallas_budget(closed, p, "entry:autotuned-matmul") == []
+
+
+# ---------------------------------------------------------------------------
+# clamp idiom: arbitrary shapes are always legal
+# ---------------------------------------------------------------------------
+
+def test_clamp_div_halves_to_divisor():
+    assert clamp_div(128, 96) == 96    # capped to the dim, which divides
+    assert clamp_div(128, 192) == 64   # halved until it divides
+    assert clamp_div(8, 8) == 8
+    assert clamp_div(16, 7) == 7
+    assert clamp_div(8, 12) == 4       # 8 does not divide 12 -> halve
+
+
+@pytest.mark.parametrize("M,K,N", [(96, 96, 96), (192, 72, 48), (24, 56, 40)])
+def test_matmul_clamps_arbitrary_shapes(M, K, N):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    out = mm_mod.matmul(a, b, interpret=True)      # default 128-blocks clamp
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.matmul(a, b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_clamp_blocks_fit_budget():
+    bm, bn, bk = mm_mod.clamp_blocks(4096, 4096, 4096, 512, 512, 512, 4)
+    for buf in (bm * bk * 4, bk * bn * 4, bm * bn * 4):
+        assert buf <= VREG_GROUP_BYTES
+    assert 4096 % bm == 0 and 4096 % bn == 0 and 4096 % bk == 0
+
+
+@pytest.mark.parametrize("S,Sk", [(96, 96), (192, 48)])
+def test_flash_attention_clamps_arbitrary_shapes(S, Sk):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 2, S, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, Sk, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, Sk, 32)), jnp.float32)
+    out = fa_mod.flash_attention(q, k, v, interpret=True)  # default 128s
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.attention(q, k, v)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# timing dispersion satellite
+# ---------------------------------------------------------------------------
+
+def test_timing_sample_exposes_dispersion():
+    from repro.testing import timing
+    s = timing.measure_us(lambda x: x + 1, jnp.ones((8,)), reps=5, warmup=1)
+    assert isinstance(s, timing.Sample)
+    assert s.reps == 5 and s.median_us > 0 and s.iqr_us >= 0
+    med = timing.median_time_us(lambda x: x + 1, jnp.ones((8,)),
+                                reps=3, warmup=0)
+    assert isinstance(med, float) and med > 0
+
+
+# ---------------------------------------------------------------------------
+# cache round-trip is deterministic
+# ---------------------------------------------------------------------------
+
+def test_cache_round_trip_deterministic(tmp_path, monkeypatch):
+    calls = {"n": 0}
+    real = autotune.measure_candidate
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(autotune, "measure_candidate", counting)
+    path = tmp_path / "cache.json"
+    with autotune.tuned(path, top_k=2, reps=2, warmup=0) as ctx:
+        r1 = autotune.autotune("rmsnorm", (32, 512), ctx=ctx)
+        n1 = calls["n"]
+        assert n1 > 0
+        r2 = autotune.autotune("rmsnorm", (32, 512), ctx=ctx)
+    assert calls["n"] == n1, "cached signature re-measured"
+    assert r2["winner"] == r1["winner"]
+    # a fresh context over the same cache file restores the same winner,
+    # still without measuring
+    with autotune.tuned(path, top_k=2, reps=2, warmup=0) as ctx2:
+        r3 = autotune.autotune("rmsnorm", (32, 512), ctx=ctx2)
+    assert calls["n"] == n1
+    assert r3["winner"] == r1["winner"]
+    on_disk = json.loads(path.read_text())
+    assert on_disk["schema"] == 1 and len(on_disk["entries"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# rank agreement: the acceptance gate on the CI host
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel,shape,min_block", [
+    ("matmul", (128, 128, 128), 64),
+    ("rmsnorm", (64, 1024), None),
+    ("reduction", (65536,), None),
+])
+def test_model_rank_agreement(tmp_path, kernel, shape, min_block):
+    """The model's top-k shortlist must contain the measured winner when
+    *every* candidate is measured (interpret kernels, CPU emulator)."""
+    with autotune.tuned(tmp_path / "c.json", top_k=3, reps=3,
+                        warmup=1) as ctx:
+        rec = autotune.autotune(kernel, shape, ctx=ctx, measure_all=True,
+                                min_block=min_block)
+    assert rec["agreement_at_k"], rec
+    assert rec["model_rank_of_winner"] < rec["top_k"]
+
+
+def test_recorded_artifact_agrees(tmp_path):
+    """The committed BENCH_kernels.json must itself report shortlist
+    agreement for every signature (re-record if the host changed)."""
+    from repro.analysis.bench import load_kernels_bench
+    import pathlib
+    doc = load_kernels_bench(pathlib.Path(__file__).resolve().parents[1])
+    assert doc is not None, "run `python -m benchmarks.run kernels` first"
+    for sig, rec in doc["records"].items():
+        assert rec["agreement_at_k"], sig
+
+
+# ---------------------------------------------------------------------------
+# ops consume tuned configs; seams stay bit-identical
+# ---------------------------------------------------------------------------
+
+def test_ops_consume_tuned_configs(tmp_path, monkeypatch):
+    seen = {}
+    real = ops._rms.rmsnorm
+
+    def spy(x, g, *, bm=8, eps=1e-6, interpret=False):
+        seen["bm"] = bm
+        return real(x, g, bm=bm, eps=eps, interpret=interpret)
+
+    monkeypatch.setattr(ops._rms, "rmsnorm", spy)
+    x = jnp.ones((16, 128), jnp.float32)
+    g = jnp.full((128,), 2.0, jnp.float32)
+    with autotune.tuned(tmp_path / "cache.json") as ctx:
+        sig = autotune.signature("rmsnorm", (16, 128), "float32",
+                                 ctx.topology_tag)
+        ctx.table[sig] = {"winner": {"bm": 2}}
+        out = ops.rmsnorm(x, g, use_pallas=True)
+        assert seen["bm"] == 2, "tuned config not consumed"
+        # explicit caller arg still wins over the tuned table
+        ops.rmsnorm(x, g, use_pallas=True, bm=4)
+        assert seen["bm"] == 4
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.rmsnorm(x, g)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_dense_ref_is_bit_identical_to_matmul_operator():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(4, 8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 12)), jnp.float32)
+    assert np.array_equal(np.asarray(ops.dense(x, w)), np.asarray(x @ w))
+
+
+def test_layers_bit_identical_tuned_vs_untuned(tmp_path):
+    """forward_train through models/layers with a rigged tuned table (a
+    different attention q-chunk than the default) must match the untuned
+    path bit for bit — blocking is a schedule, never a value change."""
+    from repro.configs import get_smoke_config
+    from repro.models import lm
+    from repro.parallel import default_rules, init_params
+
+    rules = default_rules(None)
+    cfg = get_smoke_config("llama3-8b")
+    params = init_params(lm.model_defs(cfg), jax.random.key(0))
+    rng = np.random.default_rng(0)
+    B, S = 2, 32
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    base = jax.jit(lambda p, t: lm.forward_train(p, t, cfg, rules, None)
+                   )(params, tokens)
+    with autotune.tuned(tmp_path / "cache.json") as ctx:
+        dt = str(jnp.zeros((), cfg.dtype).dtype)
+        sig = autotune.signature(
+            "flash_attention",
+            (1, cfg.n_heads, cfg.n_heads, S, S, cfg.head_dim), dt,
+            ctx.topology_tag)
+        ctx.table[sig] = {"winner": {"bq": 8, "bk": 32}}
+        assert ops.attention_q_chunk(S, S, cfg.n_heads, cfg.head_dim,
+                                     dt) == 8
+        tuned_loss = jax.jit(
+            lambda p, t: lm.forward_train(p, t, cfg, rules, None)
+        )(params, tokens)
+    assert np.array_equal(np.asarray(base), np.asarray(tuned_loss))
