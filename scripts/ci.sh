@@ -58,3 +58,14 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -c \
     'import sys; from repro.kernels.autotune import main; sys.exit(main(sys.argv[1:]))' \
     --smoke --top-k 2 --reps 3 --cache "$AT_CACHE/cache.json" > /dev/null
 echo "autotune smoke OK (all kernels, top-2 shortlist, throwaway cache)"
+
+# Chaos smoke: the elastic-training acceptance check.  Two runs of
+# launch.train's chaos loop on the 8 fake devices (2 hosts x 4): a clean
+# reference, and one with an injected host kill, a torn checkpoint, and a
+# transient straggler.  Asserts heartbeat-timeout detection, an 8 -> 4
+# device rescale (model axis intact), restore from the pre-torn durable
+# checkpoint, bit-identical (seed, step) batch replay, and loss
+# continuity within fp tolerance — see docs/RESILIENCE.md.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.testing.check_chaos --steps 12 > /dev/null
+echo "chaos smoke OK (kill + torn ckpt + straggle; 8->4 rescale, bit-exact replay)"

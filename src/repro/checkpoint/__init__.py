@@ -1,3 +1,7 @@
-from .ckpt import (CheckpointManager, restore_checkpoint, save_checkpoint)
+from .ckpt import (CheckpointManager, SimulatedCrash, latest_step,
+                   restore_checkpoint, save_checkpoint, tear_checkpoint,
+                   valid_steps)
 
-__all__ = ["CheckpointManager", "restore_checkpoint", "save_checkpoint"]
+__all__ = ["CheckpointManager", "SimulatedCrash", "latest_step",
+           "restore_checkpoint", "save_checkpoint", "tear_checkpoint",
+           "valid_steps"]

@@ -32,13 +32,21 @@ import jax
 import numpy as np
 
 
+class SimulatedCrash(RuntimeError):
+    """Raised by ``save_checkpoint(crash_after_leaves=...)`` — the chaos
+    harness's stand-in for a writer dying mid-save.  Because the write goes
+    to ``<dir>.tmp`` and publishes via os.replace, a crash at any point
+    before publish leaves only a ``.tmp`` turd that every reader ignores."""
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
 
 
 def save_checkpoint(path: str | pathlib.Path, tree: Any, step: int,
-                    extra: dict | None = None) -> pathlib.Path:
+                    extra: dict | None = None,
+                    crash_after_leaves: int | None = None) -> pathlib.Path:
     path = pathlib.Path(path)
     final = path / f"step_{step:08d}"
     tmp = path / f"step_{step:08d}.tmp"
@@ -54,13 +62,19 @@ def save_checkpoint(path: str | pathlib.Path, tree: Any, step: int,
         "leaves": [],
     }
     for i, leaf in enumerate(leaves):
+        if crash_after_leaves is not None and i >= crash_after_leaves:
+            raise SimulatedCrash(
+                f"simulated writer crash after {i} of {len(leaves)} leaves "
+                f"(step {step}; only {tmp.name} exists, never {final.name})")
         arr = np.asarray(jax.device_get(leaf))
         logical_dtype = str(arr.dtype)
         if logical_dtype == "bfloat16":
             arr = arr.view(np.uint16)          # npy-portable container
-        np.save(tmp / f"leaf_{i:05d}.npy", arr)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
         manifest["leaves"].append({"shape": list(arr.shape),
-                                   "dtype": logical_dtype})
+                                   "dtype": logical_dtype,
+                                   "nbytes": (tmp / fname).stat().st_size})
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
         shutil.rmtree(final)
@@ -68,24 +82,74 @@ def save_checkpoint(path: str | pathlib.Path, tree: Any, step: int,
     return final
 
 
-def latest_step(path: str | pathlib.Path) -> int | None:
+def _step_dir_valid(d: pathlib.Path) -> bool:
+    """Crash-consistency gate for one published ``step_*`` directory: the
+    manifest must parse and every leaf file must exist with its recorded
+    byte size.  Catches torn writes that slip past the atomic-publish
+    discipline (non-atomic network filesystems, partial object-store
+    uploads, post-publish corruption) — a torn step is *skipped*, never a
+    crash at restore time.  Pre-``nbytes`` manifests (older checkpoints)
+    fall back to an existence check."""
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError):
+        return False
+    for i, meta in enumerate(manifest.get("leaves", [])):
+        f = d / f"leaf_{i:05d}.npy"
+        if not f.exists():
+            return False
+        want = meta.get("nbytes")
+        if want is not None and f.stat().st_size != want:
+            return False
+    return len(manifest.get("leaves", [])) == manifest.get("n_leaves", -1)
+
+
+def valid_steps(path: str | pathlib.Path) -> list:
+    """Sorted steps whose checkpoint directory passes the torn-write gate."""
     path = pathlib.Path(path)
     if not path.exists():
-        return None
-    steps = [int(p.name.split("_")[1]) for p in path.glob("step_*")
-             if not p.name.endswith(".tmp") and (p / "manifest.json").exists()]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(p.name.split("_")[1]) for p in path.glob("step_*")
+                  if not p.name.endswith(".tmp") and _step_dir_valid(p))
+
+
+def latest_step(path: str | pathlib.Path) -> int | None:
+    """Newest *valid* step — a torn newest checkpoint is skipped in favour
+    of the previous durable one (the restart path's contract)."""
+    steps = valid_steps(path)
+    return steps[-1] if steps else None
+
+
+def tear_checkpoint(path: str | pathlib.Path, step: int,
+                    leaf: int = 0) -> pathlib.Path:
+    """Deliberately corrupt a *published* checkpoint by truncating one leaf
+    file to half its size — the chaos injector's ``ckpt_crash`` event (a
+    torn write surviving past os.replace, e.g. a lying network filesystem).
+    ``latest_step``/``valid_steps`` must subsequently skip the step."""
+    d = pathlib.Path(path) / f"step_{step:08d}"
+    f = d / f"leaf_{leaf:05d}.npy"
+    data = f.read_bytes()
+    f.write_bytes(data[: max(1, len(data) // 2)])
+    return d
 
 
 def restore_checkpoint(path: str | pathlib.Path, tree_like: Any,
                        step: int | None = None, shardings: Any = None) -> Any:
     """Restore into the structure of ``tree_like``; if ``shardings`` is given
     (a matching pytree of NamedSharding), leaves are placed sharded — this is
-    the elastic-rescale path (any target mesh)."""
+    the elastic-rescale path: the target mesh may be any size (the chaos
+    harness restores an 8-device checkpoint onto the 4 survivors), because
+    placement is just ``device_put`` against shardings re-derived from the
+    logical rules (``ft.rescale_rules``).  ``step=None`` picks the newest
+    checkpoint that passes the torn-write gate."""
     path = pathlib.Path(path)
     step = latest_step(path) if step is None else step
-    assert step is not None, f"no checkpoint under {path}"
+    assert step is not None, f"no valid checkpoint under {path}"
     d = path / f"step_{step:08d}"
+    if not _step_dir_valid(d):
+        raise ValueError(
+            f"checkpoint step {step} under {path} is torn or missing; "
+            f"valid steps: {valid_steps(path)}")
     manifest = json.loads((d / "manifest.json").read_text())
     leaves, treedef = _flatten(tree_like)
     assert manifest["n_leaves"] == len(leaves), "tree structure changed"
@@ -138,8 +202,17 @@ class CheckpointManager:
         self._worker.start()
 
     def _gc(self):
-        steps = sorted(int(p.name.split("_")[1])
-                       for p in self.path.glob("step_*")
-                       if not p.name.endswith(".tmp"))
-        for s in steps[:-self.keep]:
+        # retention counts *valid* checkpoints only — a torn newer step must
+        # never push the last durable one out of the keep window
+        valid = valid_steps(self.path)
+        for s in valid[:-self.keep]:
             shutil.rmtree(self.path / f"step_{s:08d}", ignore_errors=True)
+        if valid:
+            # torn dirs older than the newest durable step are garbage
+            all_steps = [int(p.name.split("_")[1])
+                         for p in self.path.glob("step_*")
+                         if not p.name.endswith(".tmp")]
+            for s in all_steps:
+                if s < valid[-1] and s not in valid:
+                    shutil.rmtree(self.path / f"step_{s:08d}",
+                                  ignore_errors=True)

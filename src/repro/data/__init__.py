@@ -1,3 +1,5 @@
-from .pipeline import DataConfig, SyntheticCorpus, make_pipeline
+from .pipeline import (DataConfig, Pipeline, SyntheticCorpus, global_batch,
+                       make_pipeline)
 
-__all__ = ["DataConfig", "SyntheticCorpus", "make_pipeline"]
+__all__ = ["DataConfig", "Pipeline", "SyntheticCorpus", "global_batch",
+           "make_pipeline"]

@@ -86,29 +86,66 @@ class SyntheticCorpus:
         return out
 
 
-def make_pipeline(cfg: DataConfig, start_step: int = 0) -> Iterator[np.ndarray]:
-    """Prefetching iterator over host-sharded batches, resumable at any step."""
-    corpus = SyntheticCorpus(cfg)
-    q: queue.Queue = queue.Queue(maxsize=cfg.prefetch)
-    stop = threading.Event()
+def global_batch(cfg: DataConfig, step: int) -> np.ndarray:
+    """The full ``(global_batch, seq_len)`` batch at ``step``, independent
+    of the host split: row ``g`` is a pure function of ``(seed, step, g)``,
+    so concatenating every host's shard (in host order) is bit-identical to
+    generating on one host — the property that makes a checkpoint-rescale
+    restart replay the byte-exact token stream on a *different* mesh."""
+    full = dataclasses.replace(cfg, n_hosts=1, host_id=0)
+    return SyntheticCorpus(full).batch(step)
 
-    def worker():
+
+class Pipeline:
+    """Prefetching iterator over host-sharded batches with an explicit,
+    checkpointable **cursor**.
+
+    ``cursor`` is the step of the *next* batch ``__next__`` will hand out —
+    batches sitting pre-computed in the prefetch queue do not advance it, so
+    the value is always safe to persist: a restarted job that rebuilds
+    ``Pipeline(cfg, start_step=cursor)`` replays the stream bit-identically
+    (there is no other loader state; the stream is a pure function of
+    ``(seed, step)``).  The prefetch worker carries ``(step, batch)`` pairs
+    and ``__next__`` asserts the pairing, so a cursor/queue desync is a
+    loud failure, not silent data skew.
+    """
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0):
+        self.cfg = cfg
+        self.cursor = start_step
+        self._corpus = SyntheticCorpus(cfg)
+        self._q: queue.Queue = queue.Queue(maxsize=cfg.prefetch)
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._produce,
+                                        args=(start_step,), daemon=True)
+        self._worker.start()
+
+    def _produce(self, start_step: int):
         step = start_step
-        while not stop.is_set():
+        while not self._stop.is_set():
             try:
-                q.put(corpus.batch(step), timeout=1.0)
+                self._q.put((step, self._corpus.batch(step)), timeout=1.0)
                 step += 1
             except queue.Full:
                 continue
 
-    t = threading.Thread(target=worker, daemon=True)
-    t.start()
+    def __iter__(self) -> "Pipeline":
+        return self
 
-    def gen():
-        try:
-            while True:
-                yield q.get()
-        finally:
-            stop.set()
+    def __next__(self) -> np.ndarray:
+        if self._stop.is_set():
+            raise StopIteration
+        step, batch = self._q.get()
+        assert step == self.cursor, \
+            f"pipeline desync: queued step {step} != cursor {self.cursor}"
+        self.cursor += 1
+        return batch
 
-    return gen()
+    def close(self):
+        self._stop.set()
+
+
+def make_pipeline(cfg: DataConfig, start_step: int = 0) -> Iterator[np.ndarray]:
+    """Prefetching iterator over host-sharded batches, resumable at any step
+    (the historical façade over :class:`Pipeline`)."""
+    return Pipeline(cfg, start_step=start_step)

@@ -1,5 +1,10 @@
-from .resilience import (ElasticPlan, HeartbeatMonitor, RestartPolicy,
-                         StragglerMitigator, plan_rescale)
+from .chaos import (ChaosEvent, ChaosSchedule, ChaosStatus, FaultInjector,
+                    VirtualClock)
+from .resilience import (ElasticPlan, HeartbeatMonitor, RescaleError,
+                         RestartPolicy, StragglerMitigator, plan_rescale,
+                         rescale_rules, survivor_devices)
 
-__all__ = ["ElasticPlan", "HeartbeatMonitor", "RestartPolicy",
-           "StragglerMitigator", "plan_rescale"]
+__all__ = ["ChaosEvent", "ChaosSchedule", "ChaosStatus", "ElasticPlan",
+           "FaultInjector", "HeartbeatMonitor", "RescaleError",
+           "RestartPolicy", "StragglerMitigator", "VirtualClock",
+           "plan_rescale", "rescale_rules", "survivor_devices"]

@@ -37,11 +37,25 @@ class HostState:
 
 
 class HeartbeatMonitor:
-    def __init__(self, n_hosts: int, timeout_s: float = 60.0,
-                 clock: Callable[[], float] = now):
+    """Controller-side liveness: a host is dead when its last beat is
+    *strictly* older than ``timeout_s`` (a beat exactly at the boundary is
+    alive — slow-but-barely is the straggler path's business, not this
+    one's).  A beat from a host already past the timeout revives it: the
+    monitor has no memory beyond ``last_beat``, so flapping hosts are the
+    restart policy's problem to rate-limit, by design.
+
+    ``hosts`` names the fleet explicitly (e.g. the survivors after a
+    rescale, in the original id space); ``n_hosts`` keeps the historical
+    ``range(n)`` form."""
+
+    def __init__(self, n_hosts: int | None = None, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = now, hosts=None):
+        assert (n_hosts is None) != (hosts is None), \
+            "pass exactly one of n_hosts= / hosts="
+        ids = range(n_hosts) if hosts is None else sorted(hosts)
         self.timeout = timeout_s
         self.clock = clock
-        self.hosts = {h: HostState(last_beat=clock()) for h in range(n_hosts)}
+        self.hosts = {h: HostState(last_beat=clock()) for h in ids}
 
     def beat(self, host: int, step: int, step_s: float | None = None):
         st = self.hosts[host]
@@ -96,16 +110,29 @@ class ElasticPlan:
     notes: str = ""
 
 
+class RescaleError(ValueError):
+    """The surviving devices cannot host the job (no survivors, or too few
+    to keep the model axis intact) — the caller must abort, not retry."""
+
+
 def plan_rescale(old_devices: int, lost_hosts: int, devices_per_host: int,
                  mesh_axes: tuple, global_batch: int,
                  restore_step: int) -> ElasticPlan:
     """Shrink policy: drop whole data-parallel rows (clusters) so the model
     axis stays intact — AraXL loses clusters, never lanes.  Batch is kept
     divisible by the new dp size (gradient noise scale changes are logged,
-    not silently absorbed)."""
+    not silently absorbed).  Raises :class:`RescaleError` when nothing
+    survives or the survivors cannot hold one model-axis replica."""
     remaining = old_devices - lost_hosts * devices_per_host
     model = mesh_axes[-1]
-    assert remaining >= model, "cannot keep the model axis intact"
+    if remaining <= 0:
+        raise RescaleError(
+            f"no survivors: {lost_hosts} lost hosts x {devices_per_host} "
+            f"devices >= {old_devices} total")
+    if remaining < model:
+        raise RescaleError(
+            f"cannot keep the model axis intact: {remaining} surviving "
+            f"devices < model axis {model}")
     dp = remaining // model
     new_devices = dp * model
     gb = global_batch
@@ -116,6 +143,44 @@ def plan_rescale(old_devices: int, lost_hosts: int, devices_per_host: int,
         new_mesh_shape=(dp, model), new_global_batch=gb,
         restore_step=restore_step,
         notes=f"dropped to {dp} data rows; batch {global_batch}->{gb}")
+
+
+def survivor_devices(lost_hosts, devices_per_host: int, devices=None) -> list:
+    """The devices that remain when the hosts in ``lost_hosts`` (original
+    host ids; host h owns the contiguous device block
+    ``[h*devices_per_host, (h+1)*devices_per_host)``) are gone."""
+    import jax
+    devices = list(jax.devices()) if devices is None else list(devices)
+    lost = set(lost_hosts)
+    return [d for i, d in enumerate(devices)
+            if i // devices_per_host not in lost]
+
+
+def rescale_rules(plan: ElasticPlan, lost_hosts, devices_per_host: int,
+                  devices=None, **rule_kw):
+    """The rescale → rules plumbing: build the survivor mesh prescribed by
+    ``plan`` and re-derive the sharding rules from the *logical* rule table
+    (``parallel.sharding.default_rules``) on it.
+
+    This is the whole elasticity trick: nothing about the checkpoint format
+    or the model code changes across a rescale — parameter shardings are a
+    pure function of (logical axes, mesh), so restore onto the new mesh is
+    just ``device_put`` against the re-derived shardings (see
+    ``repro.checkpoint.restore_checkpoint``).  Returns ``(mesh, rules)``.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.parallel.sharding import default_rules
+
+    keep = survivor_devices(lost_hosts, devices_per_host, devices)
+    if len(keep) < plan.new_devices:
+        raise RescaleError(f"plan wants {plan.new_devices} devices but only "
+                           f"{len(keep)} survived")
+    arr = np.array(keep[: plan.new_devices]).reshape(plan.new_mesh_shape)
+    mesh = Mesh(arr, ("data", "model"))
+    rule_kw.setdefault("batch", plan.new_global_batch)
+    return mesh, default_rules(mesh, **rule_kw)
 
 
 class RestartPolicy:

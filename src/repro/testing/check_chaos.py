@@ -1,0 +1,116 @@
+"""Chaos-tested elastic training check (8 fake devices).
+
+Runs the same training twice through ``launch.train.run_chaos``:
+
+* **reference** — empty fault schedule: N steps, full (4, 2) mesh, no
+  restarts (the uninterrupted loss curve);
+* **chaos** — a transient straggler (tolerated, no eviction), a torn
+  checkpoint (``ckpt_crash``: the newest save is corrupted after publish),
+  and a host kill.  The harness must detect the kill via heartbeat
+  timeout, back off, ``plan_rescale`` 8 -> 4 devices (one host of 4 lost,
+  model axis intact), restore from the *previous* durable checkpoint
+  (skipping the torn one), and replay data bit-identically.
+
+Asserted, in order of strictness:
+
+1. exactly the expected restart happened, onto the (2, 2) survivor mesh,
+   from the pre-torn checkpoint step (proves the torn-write gate worked);
+2. batch fingerprints are byte-identical per step across both runs —
+   including every step recomputed after the rescale (the pipeline's
+   (seed, step) purity surviving a mesh change);
+3. loss-curve continuity: steps before the restore point match the
+   reference bit-exactly (same mesh, same program); steps at/after the
+   restore point — recomputed on the smaller mesh — match within fp
+   tolerance (reduction-order drift only, compounding over the tail).
+
+Usage: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+       python -m repro.testing.check_chaos [--steps 12]
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.testing.x64 import x64_mode
+
+#: the injected schedule: straggle is transient (EWMA recovers, no
+#: eviction), the ckpt_crash tears the save landing after step 6 (the
+#: step-8 checkpoint), the kill at step 5 is detected ~timeout later
+CHAOS_SPEC = "straggle@1:h1:x2.5:d2,ckpt_crash@6,kill@5:h0"
+
+#: fp tolerance for post-rescale steps: same math, different device
+#: partitioning, so only reduction-order drift — loose enough for a few
+#: steps of compounding, tight enough that a wrong restore (off-by-one
+#: step, stale optimizer state) fails by orders of magnitude
+POST_RESCALE_RTOL = 2e-3
+POST_RESCALE_ATOL = 2e-4
+
+
+def main(steps: int = 12, arch: str = "llama3-8b", seed: int = 0,
+         verbose: bool = False) -> None:
+    from repro.launch.train import run_chaos
+
+    common = dict(arch=arch, steps=steps, seed=seed, n_hosts=2,
+                  model_axis=2, global_batch=8, seq_len=32, ckpt_every=4,
+                  timeout_s=3.5, base_step_s=1.0, verbose=verbose)
+    dirs = [tempfile.mkdtemp(prefix="check_chaos_")
+            for _ in ("ref", "chaos")]
+    try:
+        with x64_mode(False):
+            ref = run_chaos(chaos_spec="", ckpt_dir=dirs[0], **common)
+            chaos = run_chaos(chaos_spec=CHAOS_SPEC, ckpt_dir=dirs[1],
+                              **common)
+
+        assert ref["n_restarts"] == 0, ref["restarts"]
+        assert ref["final_mesh_shape"] == [4, 2], ref["final_mesh_shape"]
+
+        # 1. the restart state machine ran, rescaled, and skipped the torn
+        #    checkpoint (save 8 was torn; save 4 is the durable one)
+        assert chaos["n_restarts"] == 1, chaos["restarts"]
+        r = chaos["restarts"][0]
+        assert r["lost_hosts"] == [0], r
+        assert r["new_mesh_shape"] == [2, 2], r
+        assert chaos["final_mesh_shape"] == [2, 2], chaos["final_mesh_shape"]
+        assert r["restore_step"] == 4, \
+            (f"expected restore from the pre-torn step-4 checkpoint, got "
+             f"{r['restore_step']} (torn-write gate failed?)")
+        torn = [t for t in chaos["timeline"] if t["event"] == "ckpt_torn"]
+        assert torn and torn[0]["ckpt_step"] == 8, chaos["timeline"]
+
+        # 2. bit-identical (seed, step) batch replay across kill + rescale
+        assert chaos["fingerprints"] == ref["fingerprints"], \
+            "data replay diverged from the uninterrupted run"
+
+        # 3. loss-curve continuity across the kill/restart boundary
+        rstep = r["restore_step"]
+        for s in range(rstep):
+            assert chaos["losses"][s] == ref["losses"][s], \
+                (f"pre-restart step {s} diverged: {chaos['losses'][s]} vs "
+                 f"{ref['losses'][s]} (same mesh, must be bit-identical)")
+        np.testing.assert_allclose(
+            chaos["losses"][rstep:], ref["losses"][rstep:],
+            rtol=POST_RESCALE_RTOL, atol=POST_RESCALE_ATOL,
+            err_msg="post-restart loss curve diverged beyond fp tolerance")
+
+        lost_work = chaos["steps_executed"] - steps
+        print(f"check_chaos OK ({steps} steps, 1 kill + 1 torn ckpt + 1 "
+              f"transient straggler; restored step {rstep} onto "
+              f"{r['new_mesh_shape']}, {lost_work} steps of lost work "
+              f"replayed bit-identically, post-rescale loss within "
+              f"rtol={POST_RESCALE_RTOL:g})")
+    finally:
+        for d in dirs:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verbose", action="store_true")
+    a = ap.parse_args()
+    main(steps=a.steps, arch=a.arch, seed=a.seed, verbose=a.verbose)

@@ -1,7 +1,9 @@
 from .optimizer import OptConfig, adamw_init, adamw_update, lr_schedule
-from .trainer import (TrainState, init_train_state, make_grad_sync,
-                      make_train_step, train_state_defs)
+from .trainer import (TrainState, abstract_train_state, init_train_state,
+                      make_grad_sync, make_train_step, train_state_defs,
+                      train_state_shardings)
 
 __all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_schedule",
-           "TrainState", "init_train_state", "make_grad_sync",
-           "make_train_step", "train_state_defs"]
+           "TrainState", "abstract_train_state", "init_train_state",
+           "make_grad_sync", "make_train_step", "train_state_defs",
+           "train_state_shardings"]

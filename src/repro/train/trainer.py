@@ -10,7 +10,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.parallel.sharding import ShardingRules, param_shardings
+from repro.parallel.sharding import (ShardingRules, abstract_params,
+                                     param_shardings)
 from .optimizer import OptConfig, adamw_init, adamw_update, opt_state_defs
 
 
@@ -22,6 +23,30 @@ class TrainState(NamedTuple):
 def train_state_defs(cfg: ModelConfig, opt_cfg: OptConfig):
     pdefs = lm.model_defs(cfg)
     return pdefs, opt_state_defs(pdefs, opt_cfg)
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: OptConfig) -> TrainState:
+    """ShapeDtypeStruct skeleton of the full train state — the
+    ``tree_like`` a checkpoint restore targets without materialising a
+    single parameter (the restart path re-creates multi-GiB states straight
+    onto the new mesh)."""
+    pdefs, odefs = train_state_defs(cfg, opt_cfg)
+    return TrainState(abstract_params(pdefs), abstract_params(odefs))
+
+
+def train_state_shardings(cfg: ModelConfig, opt_cfg: OptConfig,
+                          rules: ShardingRules) -> TrainState:
+    """NamedSharding tree for the full train state under ``rules``.
+
+    Because optimizer-state PVs inherit each parameter's logical axes
+    (``opt_state_defs``), this is a pure function of (config, rules) — the
+    elastic-restore path calls it with rules re-derived on the *survivor*
+    mesh (``ft.rescale_rules``) and hands the result to
+    ``restore_checkpoint(shardings=...)``: cross-mesh restore without any
+    checkpoint-format migration."""
+    pdefs, odefs = train_state_defs(cfg, opt_cfg)
+    return TrainState(param_shardings(pdefs, rules),
+                      param_shardings(odefs, rules))
 
 
 def make_grad_sync(cfg: ModelConfig, rules: ShardingRules,

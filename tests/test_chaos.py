@@ -1,0 +1,202 @@
+"""Chaos-harness coverage (`repro.ft.chaos` + `launch.train.run_chaos`):
+schedule parse/round-trip/determinism, virtual-clock fault injection and
+detection latency, eviction epochs, and two in-process end-to-end runs
+(kill-and-rescale; restart-budget exhaustion) on the 8 fake devices."""
+import numpy as np
+import pytest
+
+from repro.ft import (ChaosEvent, ChaosSchedule, FaultInjector, RescaleError,
+                      VirtualClock)
+from repro.ft.chaos import CKPT_CRASH, KILL, STRAGGLE
+
+
+# ---------------------------------------------------------------------------
+# schedule format
+# ---------------------------------------------------------------------------
+
+def test_schedule_parse_and_roundtrip():
+    spec = "kill@5:h0,straggle@1:h1:x2.5:d2,ckpt_crash@5"
+    sched = ChaosSchedule.parse(spec)
+    assert len(sched.events) == 3
+    # events are sorted by (step, kind); to_spec re-parses to itself
+    assert sched.events[0] == ChaosEvent(STRAGGLE, 1, 1, 2.5, 2)
+    assert sched.events[1] == ChaosEvent(CKPT_CRASH, 5)
+    assert sched.events[2] == ChaosEvent(KILL, 5, 0)
+    assert ChaosSchedule.parse(sched.to_spec()) == sched
+    assert [e.kind for e in sched.events_at(5)] == [CKPT_CRASH, KILL]
+    assert sched.events_at(3) == []
+
+
+def test_schedule_parse_empty_and_whitespace():
+    assert ChaosSchedule.parse("") == ChaosSchedule()
+    assert ChaosSchedule.parse(" kill@2:h1 , ").events == (
+        ChaosEvent(KILL, 2, 1),)
+
+
+def test_schedule_parse_errors():
+    with pytest.raises(ValueError, match="unknown chaos event kind"):
+        ChaosSchedule.parse("explode@3:h0")
+    with pytest.raises(ValueError, match="needs a :hH host"):
+        ChaosSchedule.parse("kill@3")
+    with pytest.raises(ValueError, match="unknown chaos event field"):
+        ChaosSchedule.parse("kill@3:h0:q9")
+
+
+def test_schedule_from_seed_deterministic_and_well_formed():
+    kw = dict(steps=12, n_hosts=4, n_kills=2, n_straggles=2,
+              n_ckpt_crashes=1)
+    a = ChaosSchedule.from_seed(7, **kw)
+    assert a == ChaosSchedule.from_seed(7, **kw)       # bit-reproducible
+    assert ChaosSchedule.parse(a.to_spec()) == a       # spec round-trips
+    kills = [e for e in a.events if e.kind == KILL]
+    assert len(kills) == 2
+    assert len({e.host for e in kills}) == 2           # distinct hosts
+    for e in kills:
+        assert 12 // 3 <= e.step <= (2 * 12) // 3      # middle window
+    for e in a.events:
+        if e.kind == STRAGGLE:
+            assert 1 <= e.step < 12 // 2               # first half
+            assert e.factor == 2.5
+    # never kills the whole fleet: at most n_hosts - 1 kills
+    b = ChaosSchedule.from_seed(0, steps=12, n_hosts=2, n_kills=5)
+    assert len([e for e in b.events if e.kind == KILL]) == 1
+
+
+# ---------------------------------------------------------------------------
+# virtual clock + injector
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock():
+    c = VirtualClock()
+    assert c() == 0.0
+    assert c.advance(2.5) == 2.5
+    assert c() == 2.5
+    with pytest.raises(AssertionError):
+        c.advance(-1.0)
+
+
+def test_injector_kill_detection_latency():
+    """A killed host is detected only after ``timeout_s`` of virtual time
+    without beats — the steps in between are the lost work the restart
+    rolls back."""
+    inj = FaultInjector(ChaosSchedule.parse("kill@2:h0"), n_hosts=2,
+                        timeout_s=3.5, base_step_s=1.0)
+    detected_at = None
+    for step in range(8):
+        st = inj.tick(step)
+        assert st.step_s == 1.0
+        if st.dead:
+            detected_at = step
+            break
+    # last beat at t=2 (end of tick 1); gap > 3.5 first at t=6 (tick 5)
+    assert detected_at == 5
+    assert st.lost == (0,)
+    assert inj.failed == {0}
+    assert 0 not in inj.alive
+
+
+def test_injector_straggle_paces_the_spmd_step():
+    """The slowest alive host paces everyone (SPMD collective wait), and
+    the straggle decays after its duration."""
+    inj = FaultInjector(ChaosSchedule.parse("straggle@1:h1:x3:d2"),
+                        n_hosts=2, timeout_s=10.0)
+    assert inj.tick(0).step_s == 1.0
+    assert inj.tick(1).step_s == 3.0
+    assert inj.tick(2).step_s == 3.0
+    assert inj.tick(3).step_s == 1.0       # duration elapsed
+    assert inj.clock() == 8.0
+
+
+def test_injector_persistent_straggler_flagged_with_quorum():
+    """4 hosts, one persistently 3x slower: EWMA crosses threshold x median
+    and, after ``patience`` consecutive checks, the status demands
+    eviction."""
+    inj = FaultInjector(ChaosSchedule.parse("straggle@0:h3:x3:d50"),
+                        n_hosts=4, timeout_s=1e9,
+                        straggler_threshold=1.5, straggler_patience=3)
+    flagged_at = None
+    for step in range(20):
+        st = inj.tick(step)
+        if st.stragglers:
+            flagged_at = step
+            break
+    assert flagged_at is not None
+    assert st.stragglers == (3,)
+    assert st.lost == (3,)
+
+
+def test_injector_evict_starts_fresh_epoch():
+    inj = FaultInjector(ChaosSchedule.parse("kill@1:h0"), n_hosts=4,
+                        timeout_s=3.5)
+    status = None
+    for step in range(10):
+        status = inj.tick(step)
+        if status.lost:
+            break
+    assert status.lost == (0,)
+    inj.evict(status.lost)
+    assert inj.alive == {1, 2, 3}
+    assert inj.failed == {0}
+    assert sorted(inj.monitor.hosts) == [1, 2, 3]   # original id space
+    # survivors beat from now: nobody is dead in the new epoch
+    st = inj.tick(99)
+    assert st.dead == ()
+
+
+def test_injector_ckpt_crash_sets_tear_flag():
+    inj = FaultInjector(ChaosSchedule.parse("ckpt_crash@2"), n_hosts=2)
+    assert not inj.tick(0).tear_next_save
+    assert inj.tick(2).tear_next_save
+    assert not inj.tick(3).tear_next_save
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: run_chaos on the 8 fake devices (small model, few steps)
+# ---------------------------------------------------------------------------
+
+def test_run_chaos_kill_restart_end_to_end(tmp_path):
+    from repro.launch.train import run_chaos
+    from repro.testing.x64 import x64_mode
+
+    with x64_mode(False):
+        out = run_chaos(steps=8, chaos_spec="kill@2:h0", n_hosts=2,
+                        model_axis=2, global_batch=8, seq_len=32,
+                        ckpt_every=4, timeout_s=3.5, base_step_s=1.0,
+                        ckpt_dir=str(tmp_path), verbose=False)
+    assert out["n_restarts"] == 1
+    r = out["restarts"][0]
+    assert r["lost_hosts"] == [0]
+    assert r["detected_at_step"] == 5          # kill@2 + 3.5s timeout
+    assert r["restore_step"] == 4              # ckpt_every=4 save
+    assert r["new_mesh_shape"] == [2, 2]
+    assert out["final_mesh_shape"] == [2, 2]
+    # 6 steps before detection (0-5) + replay 4-7 after restore
+    assert out["steps_executed"] == 10
+    assert sorted(out["losses_by_step"]) == list(range(8))
+    assert len(out["fingerprints"]) == 8
+    assert all(np.isfinite(l) for l in out["losses"])
+
+
+def test_run_chaos_restart_budget_exhaustion(tmp_path):
+    from repro.launch.train import run_chaos
+    from repro.testing.x64 import x64_mode
+
+    with x64_mode(False), pytest.raises(RuntimeError,
+                                        match="restart budget exhausted"):
+        run_chaos(steps=8, chaos_spec="kill@2:h0", n_hosts=2,
+                  model_axis=2, global_batch=8, seq_len=32,
+                  ckpt_every=4, timeout_s=3.5, max_restarts=0,
+                  ckpt_dir=str(tmp_path), verbose=False)
+
+
+def test_run_chaos_killing_every_host_is_rescale_error(tmp_path):
+    from repro.launch.train import run_chaos
+    from repro.testing.x64 import x64_mode
+
+    # detection sees host 0 first, but by then host 1 is dead too: the
+    # survivor-device walk (over injector.failed) finds nothing to run on
+    with x64_mode(False), pytest.raises(RescaleError, match="survived"):
+        run_chaos(steps=8, chaos_spec="kill@2:h0,kill@3:h1", n_hosts=2,
+                  model_axis=2, global_batch=8, seq_len=32,
+                  ckpt_every=4, timeout_s=3.5,
+                  ckpt_dir=str(tmp_path), verbose=False)
