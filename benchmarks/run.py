@@ -38,6 +38,11 @@ Sections:
          the sim-model rank recorded next to the measured median+IQR —
          merged into BENCH_kernels.json (the sim-vs-kernels agreement
          artifact) and into the persistent results/autotune/ winner cache
+  serve  open-loop serving ablation (dense vs paged vs paged+chunked KV at
+         equal device memory, Poisson arrivals over a Zipf prompt pool on
+         8 fake devices): p50/p99 TTFT, decode tok/s, slot occupancy, peak
+         concurrency, resident KV bytes — merged into BENCH_serve.json
+         (schema pinned by repro.analysis.bench.validate_serve_bench)
   roof   roofline summary per dry-run cell (requires results/dryrun/*.json)
   perf   launch-strategy comparison (baseline / fsdp_pure / fsdp_hier /
          fsdp_hier_ov): merges the per-level collective pricing and the
@@ -69,6 +74,9 @@ BENCH: dict = {}
 #: the autotuner's model-vs-measured rank table, merged into
 #: BENCH_kernels.json (schema pinned by repro.analysis.bench)
 BENCH_KERNELS: dict = {}
+
+#: the open-loop serving ablation, merged into BENCH_serve.json
+BENCH_SERVE: dict = {}
 
 
 def _t(fn, *args, reps=3, **kw):
@@ -343,6 +351,24 @@ def bench_ring_attn():
         ra.setdefault(case, {})[sched] = float(us)
 
 
+def bench_serve():
+    """The paged-KV serving ablation under open-loop load: the
+    ``repro.serve.traffic`` CLI runs all three arms (dense / paged /
+    paged+chunked) at equal KV device memory in an 8-fake-device
+    subprocess; its ``serve_json`` lines are merged into BENCH_serve.json
+    keyed by arm tag."""
+    from repro.testing.subproc import run_check
+    out = run_check("repro.serve.traffic", devices=8)
+    BENCH_SERVE["schema"] = 1
+    arms = BENCH_SERVE.setdefault("open_loop", {})
+    for line in out.splitlines():
+        if line.startswith("serve/"):
+            print(line)
+        elif line.startswith("serve_json "):
+            rec = json.loads(line[len("serve_json "):])
+            arms[rec["tag"]] = rec
+
+
 def bench_roofline():
     outdir = ROOT / "results/dryrun"
     cells = sorted(outdir.glob("*.json")) if outdir.exists() else []
@@ -424,7 +450,7 @@ SECTIONS = {
     "tab2": bench_tab2, "tab3": bench_tab3, "kern": bench_kernels,
     "kernels": bench_autotune, "ring": bench_ring,
     "coll": bench_collectives, "ring_attn": bench_ring_attn,
-    "roof": bench_roofline, "perf": bench_perf,
+    "serve": bench_serve, "roof": bench_roofline, "perf": bench_perf,
 }
 
 #: sections whose derived numbers land in BENCH_sim.json
@@ -482,6 +508,18 @@ def main(argv=None) -> None:
         _deep_merge(merged, BENCH)
         path.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
         print(f"# wrote {path}", file=sys.stderr)
+
+    if not args.no_json and "serve" in which and BENCH_SERVE:
+        spath = ROOT / "BENCH_serve.json"
+        merged = {}
+        if spath.exists():
+            try:
+                merged = json.loads(spath.read_text())
+            except (json.JSONDecodeError, OSError):
+                merged = {}
+        _deep_merge(merged, BENCH_SERVE)
+        spath.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
+        print(f"# wrote {spath}", file=sys.stderr)
 
     if not args.no_json and "kernels" in which and BENCH_KERNELS:
         kpath = ROOT / "BENCH_kernels.json"

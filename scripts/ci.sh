@@ -59,6 +59,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -c \
     --smoke --top-k 2 --reps 3 --cache "$AT_CACHE/cache.json" > /dev/null
 echo "autotune smoke OK (all kernels, top-2 shortlist, throwaway cache)"
 
+# Serve smoke: the open-loop traffic generator must drive both the dense
+# and the paged (block-table KV) engines end-to-end at equal KV memory —
+# Poisson arrivals, Zipf prompt pool, 8 fake devices.  Tiny request count
+# keeps it ~30s; the recorded three-arm ablation (BENCH_serve.json) is
+# `python -m benchmarks.run serve` and is never touched by CI.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.serve.traffic \
+    --configs dense,paged --requests 6 --max-new 6 --pool 3 \
+    --max-seq 64 --rate 50 > /dev/null
+echo "serve smoke OK (open-loop dense+paged @ equal KV memory)"
+
 # Chaos smoke: the elastic-training acceptance check.  Two runs of
 # launch.train's chaos loop on the 8 fake devices (2 hosts x 4): a clean
 # reference, and one with an injected host kill, a torn checkpoint, and a

@@ -282,8 +282,8 @@ VALIDATORS = {
 # ---------------------------------------------------------------------------
 
 KERNELS_SCHEMA = 1
-TUNED_KERNELS = ("matmul", "flash_attention", "rmsnorm", "reduction",
-                 "stencil")
+TUNED_KERNELS = ("matmul", "flash_attention", "paged_attention", "rmsnorm",
+                 "reduction", "stencil")
 KERNELS_RECORD_KEYS = ("kernel", "shape", "dtype", "topology", "top_k",
                        "candidates", "winner", "model_rank_of_winner",
                        "agreement_at_k")
@@ -392,6 +392,93 @@ def load_kernels_bench(root: pathlib.Path | None = None) -> dict | None:
 
 
 # ---------------------------------------------------------------------------
+# BENCH_serve.json — the open-loop serving ablation (dense vs paged)
+# ---------------------------------------------------------------------------
+
+SERVE_SCHEMA = 1
+SERVE_TAGS = ("dense", "paged", "paged_chunked")
+SERVE_CONFIG_KEYS = ("max_batch", "max_seq", "block_tokens", "chunk",
+                     "rate_rps")
+SERVE_METRIC_KEYS = ("n_requests", "completed", "ttft_p50_ms", "ttft_p99_ms",
+                     "decode_tok_s", "occupancy", "max_concurrent", "wall_s",
+                     "kv_bytes_capacity", "kv_bytes_resident_peak")
+
+
+def _v_serve_record(tag: str, rec, problems: list) -> None:
+    where = f"open_loop[{tag}]"
+    if not _require(rec, ("tag", "config") + SERVE_METRIC_KEYS, where,
+                    problems):
+        return
+    if rec["tag"] != tag:
+        problems.append(f"{where}: tag field {rec['tag']!r} != key")
+    conf = rec["config"]
+    if _require(conf, SERVE_CONFIG_KEYS, f"{where}.config", problems):
+        for k in ("max_batch", "max_seq"):
+            if not (isinstance(conf[k], int) and conf[k] > 0):
+                problems.append(f"{where}.config[{k}]: expected positive int")
+        for k in ("block_tokens", "chunk"):   # 0 = dense / unchunked
+            if not (isinstance(conf[k], int) and conf[k] >= 0):
+                problems.append(f"{where}.config[{k}]: expected int >= 0")
+        if tag != "dense" and conf["block_tokens"] <= 0:
+            problems.append(f"{where}.config: paged arm without "
+                            f"block_tokens")
+        if not _pos(conf["rate_rps"]):
+            problems.append(f"{where}.config.rate_rps: expected positive")
+    for k in ("ttft_p50_ms", "ttft_p99_ms", "decode_tok_s", "occupancy",
+              "wall_s"):
+        if not (_is_num(rec[k]) and rec[k] >= 0):
+            problems.append(f"{where}[{k}]: expected non-negative number")
+    for k in ("n_requests", "completed", "max_concurrent",
+              "kv_bytes_capacity", "kv_bytes_resident_peak"):
+        if not (isinstance(rec[k], int) and rec[k] >= 0):
+            problems.append(f"{where}[{k}]: expected non-negative int")
+    if _is_num(rec["ttft_p50_ms"]) and _is_num(rec["ttft_p99_ms"]) \
+            and rec["ttft_p99_ms"] < rec["ttft_p50_ms"]:
+        problems.append(f"{where}: p99 TTFT below p50")
+    if _is_num(rec["occupancy"]) and not 0.0 <= rec["occupancy"] <= 1.0:
+        problems.append(f"{where}: occupancy outside [0, 1]")
+    if isinstance(rec["completed"], int) \
+            and isinstance(rec["n_requests"], int) \
+            and rec["completed"] > rec["n_requests"]:
+        problems.append(f"{where}: completed exceeds n_requests")
+    if isinstance(rec["kv_bytes_resident_peak"], int) \
+            and isinstance(rec["kv_bytes_capacity"], int) \
+            and rec["kv_bytes_resident_peak"] > rec["kv_bytes_capacity"]:
+        problems.append(f"{where}: resident KV exceeds declared capacity")
+
+
+def validate_serve_bench(doc) -> list[str]:
+    """Schema problems for BENCH_serve.json (empty when clean).  Shape +
+    consistency only — the >= 2x paged-concurrency acceptance pin lives in
+    ``tests/test_serve_paged.py``, beside the reproduction story."""
+    problems: list[str] = []
+    if not _require(doc, ("schema", "open_loop"), "BENCH_serve", problems,
+                    exact=True):
+        return problems
+    if doc["schema"] != SERVE_SCHEMA:
+        problems.append(f"BENCH_serve: schema {doc['schema']!r} != "
+                        f"{SERVE_SCHEMA}")
+    open_loop = doc["open_loop"]
+    if not _require(open_loop, SERVE_TAGS, "open_loop", problems):
+        return problems
+    for tag, rec in sorted(open_loop.items()):
+        if tag not in SERVE_TAGS:
+            problems.append(f"open_loop: unknown tag {tag!r}")
+            continue
+        _v_serve_record(tag, rec, problems)
+    return problems
+
+
+def load_serve_bench(root: pathlib.Path | None = None) -> dict | None:
+    """The recorded serving ablation, or None when not yet recorded."""
+    root = pathlib.Path(root) if root is not None else repo_root()
+    path = root / "BENCH_serve.json"
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+# ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
 
@@ -428,6 +515,10 @@ def main(argv: list[str] | None = None) -> int:
     if kernels is not None:
         problems += [f"BENCH_kernels.json: {p}"
                      for p in validate_kernels_bench(kernels)]
+    serve = load_serve_bench(root)
+    if serve is not None:
+        problems += [f"BENCH_serve.json: {p}"
+                     for p in validate_serve_bench(serve)]
     for p in problems:
         print(p)
     if problems:
@@ -435,7 +526,8 @@ def main(argv: list[str] | None = None) -> int:
         return 1
     n_rec = len(kernels["records"]) if kernels else 0
     print(f"repro.analysis.bench: {len(bench)} sections OK"
-          + (f", {n_rec} autotune records OK" if kernels else ""))
+          + (f", {n_rec} autotune records OK" if kernels else "")
+          + (f", {len(serve['open_loop'])} serve arms OK" if serve else ""))
     return 0
 
 

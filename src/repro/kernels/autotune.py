@@ -43,6 +43,7 @@ from .vrf import VREG_GROUP_BYTES, VRF_BYTES
 DEFAULTS: dict[str, dict[str, int]] = {
     "matmul": {"bm": 128, "bn": 128, "bk": 128},
     "flash_attention": {"bq": 128, "bk": 128},
+    "paged_attention": {"bt": 16},
     "rmsnorm": {"bm": 8},
     "reduction": {"block": 2048},
     "stencil": {"bh": 8, "bw": 256},
@@ -52,6 +53,7 @@ KERNELS = tuple(DEFAULTS)
 #: problem-shape conventions, documented once:
 #:   matmul           (M, K, N)
 #:   flash_attention  (B, Hq, Hkv, S, Sk, D)
+#:   paged_attention  (B, Hq, Hkv, T, D)  — T = max tokens (nblk * bt)
 #:   rmsnorm          (R, D)
 #:   reduction        (n,)
 #:   stencil          (H, W)  — interior grid, before halo padding
@@ -94,6 +96,13 @@ def candidate_buffers(kernel: str, shape, dtype: str, cfg: dict
         return [("q", bq * D * isz), ("k", bk * D * isz),
                 ("v", bk * D * isz), ("out", bq * D * isz),
                 ("m", bq * 4), ("l", bq * 4), ("acc", bq * D * 4)]
+    if kernel == "paged_attention":
+        _, Hq, Hkv, _, D = shape
+        gq = Hq // Hkv
+        bt = cfg["bt"]
+        return [("q", gq * D * isz), ("k", bt * D * isz),
+                ("v", bt * D * isz), ("out", gq * D * isz),
+                ("m", gq * 4), ("l", gq * 4), ("acc", gq * D * 4)]
     if kernel == "rmsnorm":
         D = shape[1]
         bm = cfg["bm"]
@@ -122,6 +131,9 @@ def grid_steps(kernel: str, shape, cfg: dict) -> int:
     if kernel == "flash_attention":
         B, Hq, _, S, Sk, _ = shape
         return B * Hq * (S // cfg["bq"]) * (Sk // cfg["bk"])
+    if kernel == "paged_attention":
+        B, _, Hkv, T, _ = shape
+        return B * Hkv * (T // cfg["bt"])
     if kernel == "rmsnorm":
         return shape[0] // cfg["bm"]
     if kernel == "reduction":
@@ -152,6 +164,10 @@ def enumerate_candidates(kernel: str, shape, dtype: str = "float32", *,
         cands = [{"bq": bq, "bk": bk}
                  for bq in _pow2_divisors(S, lo, 256)
                  for bk in _pow2_divisors(Sk, lo, 256)]
+    elif kernel == "paged_attention":
+        T = shape[3]
+        lo = min_block or 8
+        cands = [{"bt": bt} for bt in _pow2_divisors(T, lo, 256)]
     elif kernel == "rmsnorm":
         R = shape[0]
         cands = [{"bm": bm} for bm in _pow2_divisors(R, 1, 64)]
@@ -228,6 +244,21 @@ def model_cost(kernel: str, shape, dtype: str, cfg: dict, *,
                                  M=strip, K=bk, rows_blk=strip))
         compute = c_strip * (bq / strip) * G
         stream_bytes = G * (bq * D + 2 * bk * D) * isz + B * Hq * S * D * isz
+    elif kernel == "paged_attention":
+        B, Hq, Hkv, T, D = shape
+        bt = cfg["bt"]
+        gq = Hq // Hkv
+        strip = min(gq, 8)
+        # one block's score/softmax/weighted-sum strip, like flash_attention
+        # but with a single q row group per grid step (decode: one token)
+        c_strip = (_sim_cycles(p, "fmatmul", _bpl(p, bt),
+                               M=strip, K=D, rows_blk=strip)
+                   + _sim_cycles(p, "softmax", _bpl(p, bt), rows=strip)
+                   + _sim_cycles(p, "fmatmul", _bpl(p, D),
+                                 M=strip, K=bt, rows_blk=strip))
+        compute = c_strip * (gq / strip) * G
+        # each grid step streams one gathered K/V block; q/out ride once
+        stream_bytes = G * 2 * bt * D * isz + 2 * B * Hq * D * isz
     elif kernel == "rmsnorm":
         R, D = shape
         bm = cfg["bm"]
@@ -305,6 +336,18 @@ def _measure_case(kernel: str, shape, dtype: str, cfg: dict):
         fn = functools.partial(_fa.flash_attention, causal=True,
                                interpret=interpret, **cfg)
         return fn, (arr(B, Hq, S, D), arr(B, Hkv, Sk, D), arr(B, Hkv, Sk, D))
+    if kernel == "paged_attention":
+        from . import paged_attention as _pa
+        B, Hq, Hkv, T, D = shape
+        bt = cfg["bt"]          # baked into the pool layout, not a kwarg
+        gq, nblk = Hq // Hkv, T // bt
+        kpool = arr(Hkv, B * nblk + 1, bt, D)
+        vpool = arr(Hkv, B * nblk + 1, bt, D)
+        tables = jnp.arange(1, B * nblk + 1, dtype=jnp.int32) \
+            .reshape(B, nblk)   # disjoint full tables, block 0 reserved
+        lens = jnp.full((B,), T, jnp.int32)
+        fn = functools.partial(_pa.paged_attention, interpret=interpret)
+        return fn, (arr(B, Hkv, gq, D), kpool, vpool, tables, lens)
     if kernel == "rmsnorm":
         from . import rmsnorm as _rms
         R, D = shape
@@ -490,6 +533,7 @@ def autotune(kernel: str, shape, dtype: str = "float32", *, ctx=None,
 CASES = {
     "matmul": [(128, 128, 128), (256, 256, 128)],
     "flash_attention": [(1, 2, 1, 128, 128, 64), (1, 2, 1, 256, 256, 64)],
+    "paged_attention": [(1, 4, 2, 128, 64), (1, 4, 2, 256, 64)],
     "rmsnorm": [(64, 1024), (64, 4096)],
     "reduction": [(65536,), (262144,)],
     "stencil": [(64, 256), (128, 512)],
@@ -497,6 +541,7 @@ CASES = {
 SMOKE_CASES = {
     "matmul": [(64, 64, 64)],
     "flash_attention": [(1, 2, 1, 64, 64, 32)],
+    "paged_attention": [(1, 4, 2, 64, 32)],
     "rmsnorm": [(16, 256)],
     "reduction": [(16384,)],
     "stencil": [(16, 128)],

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from . import autotune as _at
 from . import flash_attention as _fa
 from . import matmul as _mm
+from . import paged_attention as _pa
 from . import reduction as _red
 from . import ref
 from . import rmsnorm as _rms
@@ -205,6 +206,34 @@ def dense(x, w, *, use_pallas=None):
     lead = x.shape[:-1]
     out = matmul(x.reshape(-1, x.shape[-1]), w, use_pallas=use_pallas)
     return out.reshape(*lead, w.shape[-1])
+
+
+def paged_attention(q, kpool, vpool, tables, lens, *, use_pallas=None):
+    """Paged decode attention: q (B, Hkv, G, D) against a block pool
+    (Hkv, NB, bt, D) through per-sequence block tables.  The ref path is
+    the gather + masked-softmax expression the serving engine's decode
+    layers inline; the Pallas path never materialises the gathered view
+    (scalar-prefetched tables drive the DMA).  The block size is baked
+    into the pool layout, so tuning happens where the pool is *sized*
+    (``serve.paged`` / :func:`paged_block_tokens`), not per call."""
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.paged_attention(q, kpool, vpool, tables, lens)
+    return _pa.paged_attention(q, kpool, vpool, tables, lens,
+                               interpret=(m == "interpret"))
+
+
+def paged_block_tokens(B, Hq, Hkv, T, D, dtype, *, default=16):
+    """Tokens-per-block for a paged KV pool serving this decode signature:
+    the tuned ``paged_attention`` bt when the autotune table has one, else
+    ``default`` — lowered to a power-of-two divisor of T so the pool tiles
+    ``max_seq`` exactly."""
+    cfg = _at.tuned_config("paged_attention", (B, Hq, Hkv, T, D),
+                           str(dtype)) or {}
+    bt = max(1, min(int(cfg.get("bt", default)), T))
+    while T % bt:
+        bt //= 2
+    return max(bt, 1)
 
 
 def attention_q_chunk(S, T, H, Dh, dtype, *, default=512):

@@ -175,38 +175,67 @@ def attn_cache_defs(cfg: ModelConfig, batch: int, seq_len: int) -> AttnCache:
 
 def attn_layer_decode(p, x, cache: AttnCache, pos, cfg: ModelConfig,
                       rules: ShardingRules):
-    """One-token step. pos: scalar int32 (current position).
+    """One-token step. pos: scalar int32 (shared position) or (B,) int32
+    (per-slot true positions — the serving engine's continuous batch, where
+    slots sit at different depths).
 
     Full-attention caches index directly; SWA caches are ring buffers of
-    length `window` (entry i holds the newest position ≡ i mod W)."""
+    length `window` (entry i holds the newest position ≡ i mod W).  For a
+    batch whose per-slot positions are all equal, the vector path is
+    bit-identical to the scalar path (same writes, same masks, same
+    reduction order)."""
     B, S1, d = x.shape                      # S1 == 1
     W = cache.k.shape[1]
     hd = cfg.head_dim
-    positions = jnp.full((S1,), 0) + pos
-    q, k, v = _qkv(p, x, cfg, rules, positions[None, :], rotate=True)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    if per_slot:
+        positions = pos[:, None]            # (B, 1) — rope broadcasts
+    else:
+        positions = (jnp.full((S1,), 0) + pos)[None, :]
+    q, k, v = _qkv(p, x, cfg, rules, positions, rotate=True)
     slot = pos % W
     mesh = rules.mesh
     dist_cache = mesh is not None and rules.axis("cache_seq") == "model"
+    if dist_cache and per_slot:
+        raise NotImplementedError(
+            "per-slot decode positions are not supported with the "
+            "model-sharded (cache_seq) distributed cache path")
     if not dist_cache:
-        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+        if per_slot:
+            # scatter each batch row at its own ring slot (rows distinct
+            # by construction: one write per batch element)
+            ck = cache.k.at[jnp.arange(B), slot].set(
+                k[:, 0].astype(cache.k.dtype))
+            cv = cache.v.at[jnp.arange(B), slot].set(
+                v[:, 0].astype(cache.v.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
         ck = constraint(ck, rules, "batch", "cache_seq", "kv", None)
         cv = constraint(cv, rules, "batch", "cache_seq", "kv", None)
 
     def _scores_out(qg, ckb, cvb, idx, pos_):
-        """Local masked scores + (m, l, o) partials for index slice idx."""
+        """Local masked scores + (m, l, o) partials for index slice idx.
+
+        pos_ may be a scalar (mask over (W,)) or a (B,) vector (per-slot
+        mask over (B, W))."""
+        pos_c = pos_[:, None] if pos_.ndim == 1 else pos_
         if cfg.window:
-            k_pos = pos_ - ((pos_ - idx) % W)   # newest position ≡ i (mod W)
+            k_pos = pos_c - ((pos_c - idx) % W)  # newest position ≡ i (mod W)
             valid = k_pos >= 0
         else:
             k_pos = idx
-            valid = idx <= pos_
+            valid = k_pos <= pos_c
         s = jnp.einsum("bqhgd,bthd->bhgqt", qg.astype(jnp.float32),
                        ckb.astype(jnp.float32)) / math.sqrt(hd)
-        mask = valid & (k_pos <= pos_)
+        mask = valid & (k_pos <= pos_c)
         if cfg.window:
-            mask &= (pos_ - k_pos) < cfg.window
-        s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+            mask &= (pos_c - k_pos) < cfg.window
+        if mask.ndim == 2:                  # (B, W) per-slot mask
+            s = jnp.where(mask[:, None, None, None, :], s, -1e30)
+        else:
+            s = jnp.where(mask[None, None, None, None, :], s, -1e30)
         return s, cvb.astype(jnp.float32)
 
     G = cfg.n_heads // cfg.n_kv_heads
@@ -274,6 +303,98 @@ def attn_layer_prefill(p, x, cfg: ModelConfig, rules, positions, cache_len):
         ck = jnp.roll(tail_k, shift=roll, axis=1)
         cv = jnp.roll(tail_v, shift=roll, axis=1)
     return x + o.astype(x.dtype), AttnCache(ck, cv)
+
+
+# -- paged attention (block-table KV pool) -----------------------------------
+#
+# The serving analogue of AraXL's VRF chunk map: K/V live in a shared pool
+# of fixed-size token blocks, each request holds a table of block ids, and
+# attention gathers through the table.  Block 0 is a permanent zero block —
+# unallocated table entries gather exact zeros, which is what the dense
+# cache's unwritten rows hold, so paged decode is bit-identical to the
+# dense engine.  Full attention only (no SWA ring) — the paged engine
+# rejects windowed configs.
+
+def attn_layer_decode_paged(p, x, pk, pv, tables, pos, live,
+                            cfg: ModelConfig, rules: ShardingRules):
+    """One-token decode against a block-table paged KV pool.
+
+    pk/pv (NB, bt, Hkv, Dh) — the shared block pool (block 0 is the
+    reserved zero block, never written by a live slot); tables
+    (B, max_blocks) int32; pos (B,) per-slot positions; live (B,) bool.
+    Dead slots write a predicated no-op (they re-write the zero block's
+    current value) so the batched step stays shape-stable.  The gathered
+    view ``pk[tables].reshape(B, W, ...)`` is elementwise identical to the
+    dense cache rows, and the math below is the same expression as
+    :func:`attn_layer_decode`'s vector-pos path — bit-identical streams."""
+    B, S1, d = x.shape                      # S1 == 1
+    NB, bt, Hkv, hd = pk.shape
+    W = tables.shape[1] * bt
+    q, k, v = _qkv(p, x, cfg, rules, pos[:, None], rotate=True)
+    blk = jnp.take_along_axis(tables, (pos // bt)[:, None], axis=1)[:, 0]
+    off = pos % bt
+    cur_k, cur_v = pk[blk, off], pv[blk, off]          # (B, Hkv, Dh)
+    nk = jnp.where(live[:, None, None], k[:, 0].astype(pk.dtype), cur_k)
+    nv = jnp.where(live[:, None, None], v[:, 0].astype(pv.dtype), cur_v)
+    pk = pk.at[blk, off].set(nk)
+    pv = pv.at[blk, off].set(nv)
+    ck = pk[tables].reshape(B, W, Hkv, hd)
+    cv = pv[tables].reshape(B, W, Hkv, hd)
+    ck = constraint(ck, rules, "batch", None, "kv", None)
+    cv = constraint(cv, rules, "batch", None, "kv", None)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, S1, Hkv, G, hd)
+    idx = jnp.arange(W)
+    s = jnp.einsum("bqhgd,bthd->bhgqt", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / math.sqrt(hd)
+    mask = idx <= pos[:, None]                         # (B, W) causal
+    s = jnp.where(mask[:, None, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqt,bthd->bqhgd", pr, cv.astype(jnp.float32))
+    o = kops.dense(o.reshape(B, S1, cfg.n_heads * hd).astype(x.dtype),
+                   p["wo"])
+    return x + o.astype(x.dtype), pk, pv
+
+
+def attn_layer_prefill_paged(p, x, pk, pv, table_row, start, valid,
+                             cfg: ModelConfig, rules: ShardingRules):
+    """One prefill *chunk* (B == 1) against the paged pool.
+
+    x (1, c, d) is the embedded chunk, padded to the fixed chunk length c;
+    ``valid`` counts real tokens, ``start`` is the chunk's base position
+    (a multiple of the block size).  The chunk's K/V are scattered whole
+    blocks at a time into the pre-allocated blocks of ``table_row``
+    (padding rows zeroed first, so the zero block stays zero even when the
+    tail of the slice lands on unallocated entries), then the chunk
+    attends causally over the full gathered view — earlier chunks' blocks
+    are already resident, which is what makes chunked prefill exact."""
+    B, c, d = x.shape                       # B == 1
+    NB, bt, Hkv, hd = pk.shape
+    W = table_row.shape[0] * bt
+    positions = start + jnp.arange(c)
+    q, k, v = _qkv(p, x, cfg, rules, positions[None, :], rotate=True)
+    ok = (jnp.arange(c) < valid)[None, :, None, None]
+    kz = jnp.where(ok, k, 0).astype(pk.dtype)
+    vz = jnp.where(ok, v, 0).astype(pv.dtype)
+    nblk = c // bt
+    bids = jax.lax.dynamic_slice(table_row, (start // bt,), (nblk,))
+    pk = pk.at[bids].set(kz[0].reshape(nblk, bt, Hkv, hd))
+    pv = pv.at[bids].set(vz[0].reshape(nblk, bt, Hkv, hd))
+    ck = pk[table_row].reshape(1, W, Hkv, hd)
+    cv = pv[table_row].reshape(1, W, Hkv, hd)
+    ck = constraint(ck, rules, "batch", None, "kv", None)
+    cv = constraint(cv, rules, "batch", None, "kv", None)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, c, Hkv, G, hd)
+    mask = jnp.arange(W)[None, :] <= positions[:, None]   # (c, W) causal
+    s = jnp.einsum("bqhgd,bthd->bhgqt", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / math.sqrt(hd)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqt,bthd->bqhgd", pr, cv.astype(jnp.float32))
+    o = kops.dense(o.reshape(B, c, cfg.n_heads * hd).astype(x.dtype),
+                   p["wo"])
+    return x + o.astype(x.dtype), pk, pv
 
 
 # -- cross attention ---------------------------------------------------------

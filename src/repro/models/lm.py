@@ -107,6 +107,34 @@ def cache_defs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
     return period
 
 
+def pool_defs(cfg: ModelConfig, n_blocks: int, block_tokens: int) -> dict:
+    """Paged-KV block pool defs: same tree shape as :func:`cache_defs` but
+    each ATTN leaf is (n_periods, n_blocks, block_tokens, Hkv, Dh) — a
+    shared pool of fixed-size token blocks indexed by per-request block
+    tables (block 0 is the reserved zero block).  Paged serving supports
+    pure-attention caches only (no SSM/xattn state) and full attention
+    (no SWA ring), which the serving engine validates."""
+    if cfg.window:
+        raise ValueError("paged KV supports full attention only "
+                         f"(cfg.window={cfg.window})")
+    shp = (n_blocks, block_tokens, cfg.n_kv_heads, cfg.head_dim)
+    period = {}
+    for li, layer in enumerate(cfg.layer_period):
+        slots = {}
+        for si, kind in enumerate(layer):
+            if kind == ATTN:
+                slots[f"s{si}_{kind}"] = _stack(
+                    {"k": PV(shp, cfg.dtype, ("", "", "kv", ""), "zeros"),
+                     "v": PV(shp, cfg.dtype, ("", "", "kv", ""), "zeros")},
+                    cfg.n_periods)
+            elif kind in (XATTN, MAMBA):
+                raise ValueError(
+                    f"paged KV serving supports attention caches only, "
+                    f"layer period has {kind}")
+        period[f"l{li}"] = slots
+    return period
+
+
 # ---------------------------------------------------------------------------
 # Context (encoder / image frontend)
 # ---------------------------------------------------------------------------
@@ -338,7 +366,10 @@ def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules,
 
 def decode_step(params, token, cache, pos, cfg: ModelConfig,
                 rules: ShardingRules):
-    """token (B, 1), pos scalar int32 -> (logits (B,1,V), new cache)."""
+    """token (B, 1), pos scalar int32 or (B,) int32 per-slot positions
+    -> (logits (B,1,V), new cache).  The vector form is the serving
+    engine's continuous batch; it is bit-identical to the scalar form
+    when every slot sits at the same position."""
     x = embed_tokens(params, token, cfg, rules)
     kinds = cfg.layer_period
 
@@ -378,3 +409,76 @@ def decode_step(params, token, cache, pos, cfg: ModelConfig,
         x, new_cache = jax.lax.scan(body, x, (params["period"], cache))
     logits = logits_fn(params, x, cfg, rules)
     return logits, new_cache
+
+
+def decode_step_paged(params, token, pool, tables, pos, live,
+                      cfg: ModelConfig, rules: ShardingRules):
+    """One-token decode through block tables.
+
+    token (B, 1); pool — the :func:`pool_defs` tree; tables
+    (B, max_blocks) int32; pos (B,) int32 per-slot positions; live (B,)
+    bool -> (logits (B,1,V), new pool).  Bit-identical to
+    :func:`decode_step` given tables whose gathered view equals the dense
+    cache (zero block 0 ≡ unwritten dense rows)."""
+    x = embed_tokens(params, token, cfg, rules)
+
+    def step(sp, xc, pk, pv):
+        return L.attn_layer_decode_paged(sp, xc, pk, pv, tables, pos, live,
+                                         cfg, rules)
+
+    def body(xc, pc):
+        pp, cc = pc
+        new_pool = {}
+        for li, layer in enumerate(cfg.layer_period):
+            lpool = {}
+            for si, kind in enumerate(layer):
+                key = f"s{si}_{kind}"
+                sp = pp[f"l{li}"][key]
+                if kind == ATTN:
+                    c = cc[f"l{li}"][key]
+                    xc, pk, pv = step(sp, xc, c["k"], c["v"])
+                    lpool[key] = {"k": pk, "v": pv}
+                else:
+                    xc = _apply_slot(kind, sp, xc, cfg, rules, None, None)
+            new_pool[f"l{li}"] = lpool
+        return xc, new_pool
+
+    x, new_pool = jax.lax.scan(body, x, (params["period"], pool))
+    logits = logits_fn(params, x, cfg, rules)
+    return logits, new_pool
+
+
+def prefill_chunk(params, tokens, pool, table_row, start, valid,
+                  cfg: ModelConfig, rules: ShardingRules):
+    """One fixed-size prefill chunk for a single request (B == 1).
+
+    tokens (1, c) padded to the chunk length; ``start`` the chunk's base
+    position (multiple of the block size), ``valid`` the count of real
+    tokens.  Scatters the chunk's K/V into the pre-allocated blocks of
+    ``table_row`` and returns (logits (1, c, V), new pool) — the engine
+    reads logits[0, valid-1] on the final chunk for the first generated
+    token.  Compiles once per chunk shape, not once per prompt length."""
+    x = embed_tokens(params, tokens, cfg, rules)
+
+    def body(xc, pc):
+        pp, cc = pc
+        new_pool = {}
+        for li, layer in enumerate(cfg.layer_period):
+            lpool = {}
+            for si, kind in enumerate(layer):
+                key = f"s{si}_{kind}"
+                sp = pp[f"l{li}"][key]
+                if kind == ATTN:
+                    c = cc[f"l{li}"][key]
+                    xc, pk, pv = L.attn_layer_prefill_paged(
+                        sp, xc, c["k"], c["v"], table_row, start, valid,
+                        cfg, rules)
+                    lpool[key] = {"k": pk, "v": pv}
+                else:
+                    xc = _apply_slot(kind, sp, xc, cfg, rules, None, None)
+            new_pool[f"l{li}"] = lpool
+        return xc, new_pool
+
+    x, new_pool = jax.lax.scan(body, x, (params["period"], pool))
+    logits = logits_fn(params, x, cfg, rules)
+    return logits, new_pool

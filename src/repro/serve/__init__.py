@@ -1,5 +1,10 @@
-from .engine import (Request, ServeConfig, ServingEngine,
-                     pod_local_cache_rules, prefix_key)
+from .engine import (PromptTooLongError, Request, ServeConfig, ServingEngine,
+                     pod_local_cache_rules, prefix_key, validate_prompt)
+from .paged import (BlockAllocator, PagedServeConfig, PagedServingEngine,
+                    kv_token_bytes, max_block_tokens)
+from .router import PrefixRouter
 
-__all__ = ["Request", "ServeConfig", "ServingEngine",
-           "pod_local_cache_rules", "prefix_key"]
+__all__ = ["PromptTooLongError", "Request", "ServeConfig", "ServingEngine",
+           "pod_local_cache_rules", "prefix_key", "validate_prompt",
+           "BlockAllocator", "PagedServeConfig", "PagedServingEngine",
+           "kv_token_bytes", "max_block_tokens", "PrefixRouter"]

@@ -71,6 +71,12 @@ def prefix_key(prompt: np.ndarray) -> tuple:
     return tuple(int(t) for t in np.asarray(prompt)[:PREFIX_TOKENS])
 
 
+class PromptTooLongError(ValueError):
+    """Prompt does not fit the engine's cache: the cache holds ``max_seq``
+    positions and the first decode writes at position ``len(prompt)``, so
+    admissible prompts satisfy ``len(prompt) <= max_seq - 1``."""
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -86,6 +92,20 @@ class ServeConfig:
     max_batch: int = 8
     max_seq: int = 256
     eos_id: int = 0
+
+
+def validate_prompt(prompt, max_seq: int) -> int:
+    """Shared submit()-time gate: returns the prompt length or raises
+    :class:`PromptTooLongError` (a cache overflow waiting to happen) /
+    ``ValueError`` (empty prompt)."""
+    plen = int(np.asarray(prompt).shape[0])
+    if plen < 1:
+        raise ValueError("empty prompt")
+    if plen >= max_seq:
+        raise PromptTooLongError(
+            f"prompt length {plen} >= max_seq {max_seq}: decode would "
+            f"write position {plen} into a {max_seq}-position cache")
+    return plen
 
 
 class ServingEngine:
@@ -136,6 +156,7 @@ class ServingEngine:
         self.slot_pos = np.zeros(B, np.int32)       # per-slot next position
         self.waiting: list[Request] = []
         self.finished: list[Request] = []
+        self.peak_live = 0                  # high-water mark of live slots
 
         self._prefill = jax.jit(
             lambda p, t: lm.prefill(p, t, cfg, rules, S))
@@ -147,7 +168,21 @@ class ServingEngine:
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
+        validate_prompt(req.prompt, self.scfg.max_seq)
         self.waiting.append(req)
+
+    # -- observability (shared with the paged engine / router / traffic) -----
+    @property
+    def n_live(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def capacity(self) -> int:
+        return self.scfg.max_batch
 
     def slot_pod(self, slot: int) -> int:
         """Home pod of a slot: slots are partitioned into contiguous
@@ -195,6 +230,7 @@ class ServingEngine:
                 if big.ndim >= 2 else big, self.cache, cache)
             self.slots[slot] = req
             self.slot_pos[slot] = len(req.prompt)
+            self.peak_live = max(self.peak_live, self.n_live)
         if admitted and self._cache_sh is not None:
             # keep the merged cache pinned pod-locally (the .at[].set above
             # follows sharding propagation, which may drift); steps with no
@@ -215,11 +251,12 @@ class ServingEngine:
         tok = np.zeros((B, 1), np.int32)
         for i in live:
             tok[i, 0] = self.slots[i].out[-1]
-        # single shared position: engine advances the max; per-slot masks in
-        # the attention layer handle shorter slots (pos monotone per slot)
-        pos = int(self.slot_pos[live].max())
+        # per-slot true positions: each slot writes its own ring slot and
+        # masks at its own depth (dead slots carry a stale position and
+        # write into their own retired rows — overwritten at next admit)
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
         logits, self.cache = self._step(self.params, jnp.asarray(tok),
-                                        self.cache, jnp.int32(pos))
+                                        self.cache, pos)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for i in live:
             req = self.slots[i]

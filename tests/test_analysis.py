@@ -362,6 +362,54 @@ def test_kernels_bench_validator_fires():
 
 
 # ---------------------------------------------------------------------------
+# BENCH_serve.json open-loop serving schema
+# ---------------------------------------------------------------------------
+
+def test_serve_bench_validator_accepts_recorded_artifact():
+    from repro.analysis.bench import load_serve_bench, validate_serve_bench
+    doc = load_serve_bench(ROOT)
+    assert doc is not None, "BENCH_serve.json missing — run " \
+                            "`python -m benchmarks.run serve`"
+    assert validate_serve_bench(doc) == []
+
+
+def test_serve_bench_validator_fires():
+    from repro.analysis.bench import validate_serve_bench
+    doc = json.loads((ROOT / "BENCH_serve.json").read_text())
+
+    # wrong schema pin
+    bad = {"schema": 99, "open_loop": doc["open_loop"]}
+    assert any("schema" in p for p in validate_serve_bench(bad))
+
+    # all three ablation arms are mandatory
+    broken = copy.deepcopy(doc)
+    del broken["open_loop"]["paged"]
+    assert any("missing" in p for p in validate_serve_bench(broken))
+
+    # percentiles must be ordered
+    broken = copy.deepcopy(doc)
+    rec = broken["open_loop"]["dense"]
+    rec["ttft_p99_ms"] = rec["ttft_p50_ms"] - 1.0
+    assert any("p99" in p for p in validate_serve_bench(broken))
+
+    # occupancy is a fraction of slots
+    broken = copy.deepcopy(doc)
+    broken["open_loop"]["paged"]["occupancy"] = 1.5
+    assert any("occupancy" in p for p in validate_serve_bench(broken))
+
+    # resident KV can never exceed the declared capacity
+    broken = copy.deepcopy(doc)
+    rec = broken["open_loop"]["paged"]
+    rec["kv_bytes_resident_peak"] = rec["kv_bytes_capacity"] + 1
+    assert any("capacity" in p for p in validate_serve_bench(broken))
+
+    # a paged arm must declare its block size
+    broken = copy.deepcopy(doc)
+    broken["open_loop"]["paged_chunked"]["config"]["block_tokens"] = 0
+    assert any("block_tokens" in p for p in validate_serve_bench(broken))
+
+
+# ---------------------------------------------------------------------------
 # catalogue + repo-wide clean run
 # ---------------------------------------------------------------------------
 
