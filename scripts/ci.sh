@@ -79,3 +79,14 @@ echo "serve smoke OK (open-loop dense+paged @ equal KV memory)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.testing.check_chaos --steps 12 > /dev/null
 echo "chaos smoke OK (kill + torn ckpt + straggle; 8->4 rescale, bit-exact replay)"
+
+# Multi-process chaos smoke: the same elastic story with every fault made
+# real — N worker processes, socket heartbeats, SIGKILL at a fence, a
+# writer killed mid-checkpoint-write (the crash-atomic save must leave a
+# detectably torn step), detection on real heartbeat deadlines, and a
+# deterministic seeded replay.  Hard wall-clock bound: the full check
+# takes ~2.5 min (7 worker epochs); timeout at 7 min so a hung worker or
+# a lost heartbeat fails CI instead of wedging it.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    timeout 420 python -m repro.testing.check_chaos_procs > /dev/null
+echo "procs chaos smoke OK (real SIGKILL x3, socket-deadline detection, mid-write kill)"

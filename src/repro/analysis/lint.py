@@ -47,6 +47,13 @@ L4_BANNED = {
     "time.process_time_ns", "timeit.default_timer",
 }
 
+#: L4 — the sanctioned façades.  Calls that *resolve into*
+#: ``repro.testing.timing`` are the point of the rule, never findings —
+#: this guards the carve-out against spellings where the alias table makes
+#: the façade look raw (``from repro.testing import timing as time;
+#: time.monotonic()`` resolves to ``repro.testing.timing.monotonic``).
+L4_SANCTIONED_PREFIX = "repro.testing.timing"
+
 #: L2 env sub-rule — keys a test module must not touch at import time
 L2_ENV_KEYS = ("XLA_FLAGS", "JAX_PLATFORMS")
 
@@ -264,11 +271,14 @@ class _Linter:
         if self.relpath in L4_ALLOWED:
             return
         resolved = _resolve(node.func, self.aliases)
+        if resolved is None or _matches(resolved, L4_SANCTIONED_PREFIX):
+            return
         if resolved in L4_BANNED:
             self._add("L4", node,
                       f"wall-clock timing via `{resolved}` outside "
                       f"repro.testing.timing",
-                      "use repro.testing.timing.now() for timestamps or "
+                      "use repro.testing.timing.now() for intervals, "
+                      "timing.monotonic() for liveness deadlines, or "
                       "median_time_us() for measurements")
 
     # -- walk ---------------------------------------------------------------

@@ -21,12 +21,13 @@ Fault-tolerance properties:
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import pathlib
 import shutil
 import threading
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import numpy as np
@@ -44,9 +45,42 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _fsync_dir(d: pathlib.Path) -> None:
+    """Make a directory entry durable (the rename itself lives in the
+    directory, not the file — without this a crash can survive the file
+    write yet lose the name)."""
+    fd = os.open(d, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _publish_bytes(dest: pathlib.Path, data: bytes) -> None:
+    """Crash-atomic single-file write: same-directory temp name, flush +
+    fsync the *data*, then ``os.replace`` the *name*.  A SIGKILL (or power
+    loss) at any instant leaves either no ``dest`` or a complete one —
+    never a ``dest`` with the right name and torn bytes, which is exactly
+    the state that would fool ``_step_dir_valid``'s byte-size gate."""
+    tmp = dest.with_name(dest.name + ".part")
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, dest)
+
+
 def save_checkpoint(path: str | pathlib.Path, tree: Any, step: int,
                     extra: dict | None = None,
-                    crash_after_leaves: int | None = None) -> pathlib.Path:
+                    crash_after_leaves: int | None = None,
+                    after_leaf: Callable[[int], None] | None = None,
+                    ) -> pathlib.Path:
+    """Write one step directory with two layers of crash-atomicity: every
+    file (leaves and manifest) goes through :func:`_publish_bytes`, and the
+    whole directory is staged as ``<dir>.tmp`` and published by a final
+    ``os.replace``.  ``after_leaf(i)`` (if given) runs once leaf ``i`` is
+    durable — the multi-process chaos harness parks the writer there so a
+    real SIGKILL lands between leaf writes with the manifest unpublished."""
     path = pathlib.Path(path)
     final = path / f"step_{step:08d}"
     tmp = path / f"step_{step:08d}.tmp"
@@ -70,15 +104,21 @@ def save_checkpoint(path: str | pathlib.Path, tree: Any, step: int,
         logical_dtype = str(arr.dtype)
         if logical_dtype == "bfloat16":
             arr = arr.view(np.uint16)          # npy-portable container
-        fname = f"leaf_{i:05d}.npy"
-        np.save(tmp / fname, arr)
+        buf = io.BytesIO()
+        np.save(buf, arr)
+        data = buf.getvalue()
+        _publish_bytes(tmp / f"leaf_{i:05d}.npy", data)
         manifest["leaves"].append({"shape": list(arr.shape),
                                    "dtype": logical_dtype,
-                                   "nbytes": (tmp / fname).stat().st_size})
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
+                                   "nbytes": len(data)})
+        if after_leaf is not None:
+            after_leaf(i)
+    _publish_bytes(tmp / "manifest.json", json.dumps(manifest).encode())
+    _fsync_dir(tmp)                           # leaf names durable pre-publish
     if final.exists():
         shutil.rmtree(final)
     os.replace(tmp, final)                    # atomic publish
+    _fsync_dir(path)
     return final
 
 

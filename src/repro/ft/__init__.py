@@ -1,10 +1,12 @@
 from .chaos import (ChaosEvent, ChaosSchedule, ChaosStatus, FaultInjector,
                     VirtualClock)
+from .cluster import ClusterSupervisor, WorkerSpec, drill
 from .resilience import (ElasticPlan, HeartbeatMonitor, RescaleError,
                          RestartPolicy, StragglerMitigator, plan_rescale,
                          rescale_rules, survivor_devices)
 
-__all__ = ["ChaosEvent", "ChaosSchedule", "ChaosStatus", "ElasticPlan",
-           "FaultInjector", "HeartbeatMonitor", "RescaleError",
-           "RestartPolicy", "StragglerMitigator", "VirtualClock",
-           "plan_rescale", "rescale_rules", "survivor_devices"]
+__all__ = ["ChaosEvent", "ChaosSchedule", "ChaosStatus", "ClusterSupervisor",
+           "ElasticPlan", "FaultInjector", "HeartbeatMonitor",
+           "RescaleError", "RestartPolicy", "StragglerMitigator",
+           "VirtualClock", "WorkerSpec", "drill", "plan_rescale",
+           "rescale_rules", "survivor_devices"]

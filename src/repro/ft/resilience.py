@@ -184,10 +184,21 @@ def rescale_rules(plan: ElasticPlan, lost_hosts, devices_per_host: int,
 
 
 class RestartPolicy:
+    """Exponential-backoff restart budget.
+
+    ``max_backoff_s`` caps the delay (default 5 min — beyond that a
+    flapping job should page a human, not wait longer), and the exponent
+    itself is clamped *before* the float multiply: a long-lived supervisor
+    that keeps calling :meth:`next_delay` past exhaustion (to log the
+    would-be delay, say) must never hit ``OverflowError`` from
+    ``2 ** restarts`` at restart count ~1024."""
+
     def __init__(self, max_restarts: int = 10, backoff_s: float = 5.0,
-                 clock: Callable[[], float] = now):
+                 clock: Callable[[], float] = now,
+                 max_backoff_s: float = 300.0):
         self.max_restarts = max_restarts
         self.backoff = backoff_s
+        self.max_backoff = max_backoff_s
         self.clock = clock
         self.restarts = 0
         self._last = 0.0
@@ -196,6 +207,6 @@ class RestartPolicy:
         return self.restarts < self.max_restarts
 
     def next_delay(self) -> float:
-        d = self.backoff * (2 ** self.restarts)
+        d = self.backoff * (2.0 ** min(self.restarts, 62))
         self.restarts += 1
-        return min(d, 300.0)
+        return min(d, self.max_backoff)

@@ -320,6 +320,11 @@ def main():
                     help="elastic-training chaos harness: injected host "
                          "kills/straggles, checkpoint-rescale restarts, "
                          "bit-identical data replay")
+    ap.add_argument("--procs", action="store_true",
+                    help="with --chaos: run each simulated host as a real "
+                         "OS worker process with socket heartbeats; kill@S "
+                         "delivers an actual SIGKILL and detection runs on "
+                         "real-clock deadlines (repro.ft.cluster)")
     ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--chaos-spec", default=None,
                     metavar="kill@S:hH,straggle@S:hH:xF:dD,ckpt_crash@S",
@@ -332,6 +337,33 @@ def main():
                     help="heartbeat timeout (virtual seconds)")
     ap.add_argument("--max-restarts", type=int, default=3)
     args = ap.parse_args()
+    if args.procs and not args.chaos:
+        ap.error("--procs requires --chaos")
+    if args.chaos and args.procs:
+        from repro.ft.cluster import ClusterSupervisor
+        spec = args.chaos_spec
+        if spec is None:
+            # seeded schedule, procs-compatible events only (straggles are
+            # virtual-clock-only: real slowness cannot be injected
+            # deterministically into an OS process)
+            spec = ChaosSchedule.from_seed(
+                args.chaos_seed, steps=args.steps, n_hosts=args.hosts,
+                n_kills=1, n_straggles=0, n_ckpt_crashes=0).to_spec()
+        sup = ClusterSupervisor(
+            args.arch, steps=args.steps, n_hosts=args.hosts,
+            n_devices=len(jax.devices()), model_axis=args.model_axis,
+            global_batch=args.batch, seq_len=args.seq, lr=args.lr,
+            ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+            chaos_spec=spec, timeout_s=args.timeout,
+            max_restarts=args.max_restarts,
+            n_microbatches=args.microbatches)
+        out = sup.run()
+        print(f"[chaos] done (procs): {out['n_restarts']} restart(s) "
+              f"across {out['epochs']} epoch(s), final mesh "
+              f"{out['final_mesh_shape']}, first loss "
+              f"{out['losses'][0]:.4f} final {out['final_loss']:.4f} "
+              f"(schedule: {out['chaos_spec'] or 'none'})")
+        return
     if args.chaos:
         out = run_chaos(args.arch, steps=args.steps,
                         chaos_seed=args.chaos_seed,

@@ -1,10 +1,11 @@
 from .engine import (PromptTooLongError, Request, ServeConfig, ServingEngine,
                      pod_local_cache_rules, prefix_key, validate_prompt)
-from .paged import (BlockAllocator, PagedServeConfig, PagedServingEngine,
-                    kv_token_bytes, max_block_tokens)
+from .paged import (BlockAllocator, BlockLeakError, PagedServeConfig,
+                    PagedServingEngine, kv_token_bytes, max_block_tokens)
 from .router import PrefixRouter
 
 __all__ = ["PromptTooLongError", "Request", "ServeConfig", "ServingEngine",
            "pod_local_cache_rules", "prefix_key", "validate_prompt",
-           "BlockAllocator", "PagedServeConfig", "PagedServingEngine",
-           "kv_token_bytes", "max_block_tokens", "PrefixRouter"]
+           "BlockAllocator", "BlockLeakError", "PagedServeConfig",
+           "PagedServingEngine", "kv_token_bytes", "max_block_tokens",
+           "PrefixRouter"]

@@ -154,6 +154,36 @@ class BlockAllocator:
         if key is not None and self._prefix.get(key) == bid:
             del self._prefix[key]
 
+    def assert_quiescent(self) -> None:
+        """Shutdown hygiene gate: with no work in flight, every block must
+        be back on the free list, every refcount zero (including the
+        reserved zero block, which nothing may ever retain), and the
+        shared-prefix registry empty.  A violation is a leaked reservation
+        — the paged engine's equivalent of an fd leak: invisible to
+        correctness checks, fatal to a long-running server as the pool
+        quietly shrinks.  Raises :class:`BlockLeakError` naming the
+        leaked block ids."""
+        problems = []
+        live = [int(b) for b in np.nonzero(self.refcount)[0]]
+        if live:
+            counts = {b: int(self.refcount[b]) for b in live[:8]}
+            problems.append(f"{len(live)} blocks with live refcounts "
+                            f"(id -> count, first 8: {counts})")
+        if self.n_free != self.n_blocks:
+            problems.append(f"free list holds {self.n_free} of "
+                            f"{self.n_blocks} blocks")
+        if self._prefix or self._key_of:
+            problems.append(f"prefix registry not empty "
+                            f"({len(self._prefix)} keys, "
+                            f"{len(self._key_of)} reverse entries)")
+        if problems:
+            raise BlockLeakError("; ".join(problems))
+
+
+class BlockLeakError(RuntimeError):
+    """A shutdown-time block-accounting violation — see
+    :meth:`BlockAllocator.assert_quiescent`."""
+
 
 class PagedServingEngine:
     """Continuous batching over a paged KV pool.
@@ -473,3 +503,16 @@ class PagedServingEngine:
             if not self.step() and not self.waiting:
                 break
         return self.finished
+
+    def shutdown(self) -> None:
+        """End-of-life hygiene: refuse to shut down over live work, then
+        require the allocator quiescent (:class:`BlockLeakError` names any
+        leaked blocks).  Callers that drain to completion (the traffic
+        generator, the acceptance checks) call this so a refcount bug
+        fails the run loudly instead of surviving as a slow pool leak."""
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if live or self.waiting:
+            raise BlockLeakError(
+                f"shutdown with work in flight: live slots {live}, "
+                f"{len(self.waiting)} waiting requests")
+        self.alloc.assert_quiescent()

@@ -193,6 +193,9 @@ def main(argv=None) -> int:
         tag = tag.strip()
         eng, conf, kv_cap, kv_peak = _build(tag, args)
         metrics = run_open_loop(eng, lc)
+        if hasattr(eng, "shutdown") and eng.n_live == 0 \
+                and eng.n_waiting == 0:
+            eng.shutdown()      # leaked KV blocks fail the run loudly
         metrics["kv_bytes_capacity"] = int(kv_cap)
         metrics["kv_bytes_resident_peak"] = int(kv_peak())
         conf["rate_rps"] = lc.rate_rps

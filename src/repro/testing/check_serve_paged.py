@@ -79,9 +79,9 @@ def main(n: int = 8) -> None:
     assert paged.alloc.shared_hits >= 1, "no shared-prefix block reuse"
     assert paged.cow_copies >= 1, "no COW copy despite shared full blocks"
 
-    # 3. allocator hygiene: everything returned, zero block untouched
-    assert paged.alloc.n_allocated == 0, \
-        f"{paged.alloc.n_allocated} blocks leaked"
+    # 3. allocator hygiene: everything returned, zero block untouched —
+    # shutdown() is the full gate (free list, refcounts, prefix registry)
+    paged.shutdown()
     zeros = jax.tree.leaves(paged.pool)
     assert all(bool((leaf[:, 0] == 0).all()) for leaf in zeros), \
         "zero block written"

@@ -16,11 +16,20 @@ import sys
 SRC = str(pathlib.Path(__file__).resolve().parents[2])
 
 
-def run_check(module: str, *args: str, devices: int = 8, timeout: int = 900) -> str:
+def pinned_env(devices: int = 8) -> dict[str, str]:
+    """A child-process environment with the fake-device count, ``src`` on
+    ``PYTHONPATH``, and the CPU platform pinned — the one way any repro
+    subprocess (check modules, chaos cluster workers) gets its devices,
+    regardless of what this process inherited."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def run_check(module: str, *args: str, devices: int = 8, timeout: int = 900) -> str:
+    env = pinned_env(devices)
     proc = subprocess.run(
         [sys.executable, "-m", module, *args],
         env=env, capture_output=True, text=True, timeout=timeout)

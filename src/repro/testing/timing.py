@@ -42,6 +42,24 @@ def now() -> float:
     return time.perf_counter()
 
 
+def monotonic() -> float:
+    """Real monotonic seconds — the *liveness-deadline* clock.
+
+    The second (and last) sanctioned raw clock read.  :func:`now` serves
+    interval *measurement* (benchmark stopwatches, tokens/s); this one
+    serves *deadlines* against the outside world: the multi-process chaos
+    supervisor (``repro.ft.cluster``) must decide that a worker whose
+    socket heartbeats stopped is actually dead, which is only meaningful
+    on a clock that keeps ticking while this process sleeps.
+    ``time.monotonic`` never jumps under NTP slew and, unlike
+    ``perf_counter``, is documented system-wide on the platforms we run
+    on — two processes' deadlines compose.  Everything virtual-clock
+    (``ft.chaos.VirtualClock``) stays virtual; reaching for this function
+    outside supervisor liveness code is an L4 finding waiting to happen.
+    """
+    return time.monotonic()
+
+
 def measure_us(fn, *args, reps: int = 10, warmup: int = 2) -> Sample:
     """Compiled-execution microseconds with dispersion: jit once,
     ``warmup`` discarded steady-state calls, then ``reps`` timed calls

@@ -164,6 +164,34 @@ def test_noqa_suppression_is_per_rule_and_per_line():
     assert _rules(lint_source(other, "src/repro/ft/foo.py")) == ["L4"]
 
 
+def test_l4_sanctioned_monotonic_facade():
+    """Raw ``time.monotonic`` is still a finding, but the supervisor's
+    sanctioned spelling — ``repro.testing.timing.monotonic()`` for
+    liveness deadlines — passes under every aliasing."""
+    raw = ("import time\n"
+           "def watchdog(deadline):\n"
+           "    return time.monotonic() > deadline\n")
+    bad = lint_source(raw, "src/repro/ft/foo.py")
+    assert _rules(bad) == ["L4"] and [f.line for f in bad] == [3]
+    assert "timing.monotonic" in bad[0].hint     # hint names the facade
+
+    direct = ("from repro.testing.timing import monotonic\n"
+              "def watchdog(deadline):\n"
+              "    return monotonic() > deadline\n")
+    assert lint_source(direct, "src/repro/ft/foo.py") == []
+
+    # the adversarial alias: the facade imported *as* ``time`` must not
+    # fire, and a real ``time`` aliased to something else still must
+    aliased = ("from repro.testing import timing as time\n"
+               "def watchdog(deadline):\n"
+               "    return time.monotonic() > deadline\n")
+    assert lint_source(aliased, "src/repro/ft/foo.py") == []
+    sneaky = ("import time as clock\n"
+              "def watchdog(deadline):\n"
+              "    return clock.monotonic() > deadline\n")
+    assert _rules(lint_source(sneaky, "src/repro/ft/foo.py")) == ["L4"]
+
+
 # ---------------------------------------------------------------------------
 # S1 — collective pricing coverage
 # ---------------------------------------------------------------------------

@@ -157,3 +157,60 @@ def test_restore_onto_smaller_mesh(tmp_path):
         used = {d.id for d in got[k].sharding.device_set}
         assert used <= {4, 5, 6, 7}, f"{k} landed on a dead host: {used}"
     assert dict(got["w"].sharding.mesh.shape) == {"data": 2, "model": 2}
+
+
+# ---------------------------------------------------------------------------
+# crash-atomic writes (real-SIGKILL torn states, not just simulated ones)
+# ---------------------------------------------------------------------------
+
+def test_truncated_manifest_is_invalid(tmp_path):
+    """A manifest cut mid-byte (power loss after rename, before the data
+    hit disk) must fail the validity gate, not crash restore."""
+    save_checkpoint(tmp_path, _tree(), step=1)
+    save_checkpoint(tmp_path, _tree(1), step=2)
+    man = tmp_path / "step_00000002" / "manifest.json"
+    man.write_bytes(man.read_bytes()[: len(man.read_bytes()) // 2])
+    assert valid_steps(tmp_path) == [1]
+    assert latest_step(tmp_path) == 1
+
+
+def test_renamed_but_unsynced_leaf_is_invalid(tmp_path):
+    """Model the rename-durable-but-data-lost window: the leaf file name
+    exists (dir entry synced) but its bytes were never flushed, so the
+    file is empty.  The byte-size gate must reject the step."""
+    save_checkpoint(tmp_path, _tree(), step=1)
+    save_checkpoint(tmp_path, _tree(1), step=2)
+    (tmp_path / "step_00000002" / "leaf_00000.npy").write_bytes(b"")
+    assert valid_steps(tmp_path) == [1]
+
+
+def test_after_leaf_hook_sees_durable_prefix(tmp_path):
+    """``after_leaf(i)`` fires only once leaf ``i`` is published: at each
+    callback the staging dir holds exactly leaves 0..i and no manifest —
+    the window where a SIGKILL produces a torn (and rejected) step."""
+    tree = _tree()
+    n = len(jax.tree.leaves(tree))
+    seen = []
+
+    def hook(i):
+        stage = tmp_path / "step_00000001.tmp"
+        leaves = sorted(p.name for p in stage.glob("leaf_*.npy"))
+        assert leaves == [f"leaf_{j:05d}.npy" for j in range(i + 1)]
+        assert not (stage / "manifest.json").exists()
+        assert not list(stage.glob("*.part")), "unpublished temp visible"
+        seen.append(i)
+
+    save_checkpoint(tmp_path, tree, step=1, after_leaf=hook)
+    assert seen == list(range(n))
+    assert valid_steps(tmp_path) == [1]
+
+
+def test_publish_leaves_no_part_turds(tmp_path):
+    """Every file goes through the .part-then-replace protocol; after a
+    clean save no temp names survive anywhere under the step dir."""
+    save_checkpoint(tmp_path, _tree(), step=3)
+    assert not list(tmp_path.rglob("*.part"))
+    assert not list(tmp_path.glob("*.tmp"))
+    got, step, _ = restore_checkpoint(tmp_path, _tree())
+    assert step == 3
+    _assert_trees_equal(got, _tree())

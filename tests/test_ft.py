@@ -145,6 +145,37 @@ def test_restart_policy_exhaustion():
     assert p.next_delay() == 4.0
 
 
+def test_restart_policy_custom_cap_and_overflow_safety():
+    """The cap is configurable, and the exponent is clamped so a long-
+    running supervisor at restart #5000 gets the cap, not OverflowError."""
+    p = RestartPolicy(max_restarts=10, backoff_s=0.5, max_backoff_s=10.0)
+    assert p.next_delay() == 0.5
+    delays = [p.next_delay() for _ in range(7)]
+    assert delays == [1.0, 2.0, 4.0, 8.0, 10.0, 10.0, 10.0]
+    p.restarts = 5000                          # way past float overflow
+    assert p.next_delay() == 10.0
+
+
+def test_restart_policy_exhaustion_at_exact_budget():
+    """should_restart flips False exactly when the budget is spent, not
+    one restart early or late."""
+    p = RestartPolicy(max_restarts=3, backoff_s=1.0)
+    used = 0
+    while p.should_restart():
+        p.next_delay()
+        used += 1
+    assert used == 3
+    assert p.restarts == 3
+
+
+def test_restart_policy_zero_budget():
+    """max_restarts=0 means fail fast: never restart, and the first
+    delay (if a caller ignores the gate) is just the base backoff."""
+    p = RestartPolicy(max_restarts=0, backoff_s=1.0)
+    assert not p.should_restart()
+    assert p.next_delay() == 1.0
+
+
 # ---------------------------------------------------------------------------
 # plan_rescale: device-count arithmetic for every lost-host count, 1-8 hosts
 # ---------------------------------------------------------------------------

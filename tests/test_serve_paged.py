@@ -169,3 +169,73 @@ def test_bench_serve_concurrency_acceptance():
         (paged["max_concurrent"], dense["max_concurrent"])
     for arm in arms.values():
         assert arm["completed"] == arm["n_requests"]
+
+
+# ---------------------------------------------------------------------------
+# shutdown hygiene: assert_quiescent / BlockLeakError (the fd-leak analogue)
+# ---------------------------------------------------------------------------
+
+def test_assert_quiescent_passes_when_clean():
+    from repro.serve import BlockLeakError  # noqa: F401 (export check)
+    a = BlockAllocator(4, 8)
+    b = a.alloc(("prefix", (1, 2)))
+    a.retain(b)
+    a.release(b)
+    a.release(b)                            # last ref: key dropped, freed
+    a.assert_quiescent()                    # no raise
+
+
+def test_assert_quiescent_names_live_refcounts():
+    from repro.serve import BlockLeakError
+    a = BlockAllocator(4, 8)
+    b1, b2 = a.alloc(), a.alloc()
+    a.release(b1)
+    with pytest.raises(BlockLeakError, match="live refcounts"):
+        a.assert_quiescent()
+    a.release(b2)
+    a.assert_quiescent()
+
+
+def test_assert_quiescent_catches_stale_registry_entry():
+    """A registry key whose block was freed behind its back (the COW
+    forget_key contract violated) is a leak even with all refcounts
+    zero — the stale key would alias future prefills to a recycled
+    block's contents."""
+    from repro.serve import BlockLeakError
+    a = BlockAllocator(4, 8)
+    b = a.alloc(("k", (7,)))
+    a.release(b)
+    a.assert_quiescent()
+    a._prefix[("stale", (0,))] = 3          # inject the violation
+    with pytest.raises(BlockLeakError, match="registry"):
+        a.assert_quiescent()
+
+
+def test_engine_shutdown_refuses_inflight_then_catches_leak():
+    """PagedServingEngine.shutdown(): refuses while work is in flight,
+    passes after a clean drain, and surfaces an injected block leak as
+    BlockLeakError instead of silently shrinking the pool."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import lm
+    from repro.parallel.sharding import default_rules, init_params
+    from repro.serve import (BlockLeakError, PagedServeConfig,
+                             PagedServingEngine)
+    cfg = get_smoke_config("llama3-8b")
+    rules = default_rules(None)
+    params = init_params(lm.model_defs(cfg), jax.random.key(0))
+    eng = PagedServingEngine(cfg, params, rules,
+                             PagedServeConfig(max_batch=2, max_seq=32,
+                                              block_tokens=8, n_blocks=8))
+    eng.submit(Request(rid=0, prompt=np.ones(8, np.int32),
+                       max_new_tokens=2))
+    with pytest.raises(BlockLeakError, match="in flight"):
+        eng.shutdown()                      # still queued
+    eng.run()                               # drain to completion
+    eng.shutdown()                          # clean: no raise
+
+    leaked = eng.alloc.alloc()              # inject a leaked reservation
+    with pytest.raises(BlockLeakError, match="live refcounts"):
+        eng.shutdown()
+    eng.alloc.release(leaked)
+    eng.shutdown()
